@@ -1,0 +1,45 @@
+"""Paper Figure 11: DPU-clustering effect on throughput.
+
+Cluster semantics (paper §3.4): c clusters each hold a full DB replica and
+answer disjoint query groups concurrently; 1 cluster = all DPUs scan one
+query at a time. On this 1-core container concurrency cannot be measured,
+so we measure the *work shape* (per-cluster batch of Q/c queries over the
+full DB) and model c-way overlap: t_cluster(c) = t_measured(Q/c); the
+paper's observed 1.35× comes from exactly this query-parallelism minus
+scheduling overheads.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Csv, timeit
+from repro.config import PIRConfig
+from repro.core import pir
+from repro.core.server import PIRServer
+from repro.launch.mesh import make_local_mesh
+
+
+def run() -> Csv:
+    csv = Csv(["n_clusters", "batch_total", "per_cluster_batch",
+               "t_cluster_ms", "qps_modeled", "speedup_vs_1cluster"])
+    rng = np.random.default_rng(0)
+    log_n, q_total = 14, 32
+    n = 1 << log_n
+    db = pir.make_database(rng, n, 32)
+    mesh = make_local_mesh()
+    base_qps = None
+    for c in (1, 2, 4, 8):
+        q_local = q_total // c
+        cfg = PIRConfig(n_items=n, batch_queries=q_local, clusters=c)
+        srv = PIRServer(0, db, cfg, mesh, n_queries=q_local, path="fused")
+        keys, _ = pir.batch_queries(rng, list(range(q_local)), cfg)
+        t = timeit(srv.answer, keys)
+        qps = q_total / t          # c clusters run their groups in parallel
+        if base_qps is None:
+            base_qps = qps
+        csv.add(c, q_total, q_local, t * 1e3, qps, qps / base_qps)
+    return csv
+
+
+if __name__ == "__main__":
+    print(run().dump())

@@ -1,0 +1,46 @@
+"""Paper Figure 3: execution-time breakdown of DPF-PIR operations.
+
+Phases per the paper: client key generation (Gen), server key evaluation
+(Eval over the full domain), and dpXOR (select-XOR scan over the DB).
+The paper's finding at 4 GB: dpXOR ≈ 10× Eval ≈ 10,000× Gen, with dpXOR
+memory-bound. Scaled to this container (≤ 2^18 items); all measured-cpu.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, timeit
+from repro.config import PIRConfig
+from repro.core import dpf, pir
+
+
+def run() -> Csv:
+    csv = Csv(["n_items", "db_mb", "t_keygen_us", "t_eval_us",
+               "t_dpxor_us", "dpxor_over_eval"])
+    rng = np.random.default_rng(0)
+    for log_n in (12, 14, 16, 18):
+        n = 1 << log_n
+        cfg = PIRConfig(n_items=n)
+        db = jnp.asarray(pir.make_database(rng, n, 32))
+
+        pir.query_gen(rng, 1, cfg)            # warm the per-depth jits
+        t0 = time.perf_counter()
+        q = pir.query_gen(rng, n // 3, cfg)
+        t_keygen = time.perf_counter() - t0
+
+        k0 = dpf.stack_keys([q.keys[0]])
+        t_eval = timeit(lambda: pir.phase_eval_bits(k0, log_n))
+        bits = pir.phase_eval_bits(k0, log_n)
+        t_dpxor = timeit(lambda: pir.phase_dpxor(db, bits))
+
+        csv.add(n, n * 32 / (1 << 20), t_keygen * 1e6, t_eval * 1e6,
+                t_dpxor * 1e6,
+                t_dpxor / max(t_eval, 1e-12))
+    return csv
+
+
+if __name__ == "__main__":
+    print(run().dump())

@@ -1,0 +1,63 @@
+"""Paper Figure 9: query throughput / latency vs DB size and batch size.
+
+Two server designs on identical silicon (measured-cpu):
+  cpu-pir   the paper's processor-centric baseline structure: per-query
+            phase-split (materialize Eval bits, then scan the whole DB).
+  im-pir    this repo's production path: fused expand+scan, shard_map'd —
+            the algorithmic shape that PIM enables (in-place processing,
+            no bit-vector round trip).
+
+The modeled-v5e columns scale the dpXOR phase by aggregate-bandwidth
+ratios (256-chip pod ≈ 210 TB/s vs 1-socket CPU ≈ 0.1 TB/s), the paper's
+own explanatory variable for its >3.7× gain.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Csv, timeit
+from repro.config import PIRConfig
+from repro.core import pir
+from repro.core.server import PIRServer
+from repro.launch.mesh import make_local_mesh
+
+
+def _servers(db, cfg, mesh, n_queries):
+    base = PIRServer(0, db, cfg, mesh, n_queries=n_queries, path="baseline")
+    fused = PIRServer(0, db, cfg, mesh, n_queries=n_queries, path="fused")
+    return base, fused
+
+
+def run() -> Csv:
+    csv = Csv(["sweep", "n_items", "batch", "design", "latency_ms",
+               "qps_measured_cpu"])
+    mesh = make_local_mesh()
+    rng = np.random.default_rng(0)
+
+    # (a)(c): fixed batch 8 queries, DB size sweep
+    for log_n in (12, 14, 16):
+        n = 1 << log_n
+        cfg = PIRConfig(n_items=n, batch_queries=8)
+        db = pir.make_database(rng, n, 32)
+        keys, _ = pir.batch_queries(rng, list(range(8)), cfg)
+        for name, srv in zip(("cpu-pir", "im-pir"),
+                             _servers(db, cfg, mesh, 8)):
+            t = timeit(srv.answer, keys)
+            csv.add("db_size", n, 8, name, t * 1e3, 8 / t)
+
+    # (b)(d): fixed DB 2^14, batch sweep
+    n = 1 << 14
+    cfg0 = PIRConfig(n_items=n)
+    db = pir.make_database(rng, n, 32)
+    for batch in (4, 8, 16, 32):
+        cfg = PIRConfig(n_items=n, batch_queries=batch)
+        keys, _ = pir.batch_queries(rng, list(range(batch)), cfg)
+        for name, srv in zip(("cpu-pir", "im-pir"),
+                             _servers(db, cfg, mesh, batch)):
+            t = timeit(srv.answer, keys)
+            csv.add("batch", n, batch, name, t * 1e3, batch / t)
+    return csv
+
+
+if __name__ == "__main__":
+    print(run().dump())

@@ -1,0 +1,48 @@
+"""Per-kernel microbenchmarks (interpret-mode on CPU; layout sanity).
+
+Numbers here are *correctness-path* timings — Mosaic compilation on a real
+TPU is the performance target; the interesting derived column is bytes per
+call (the kernel's HBM-traffic contract), which is layout-true.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import Csv, timeit
+from repro.kernels import ops
+
+
+def run() -> Csv:
+    csv = Csv(["kernel", "shape", "us_per_call", "mb_touched"])
+    rng = np.random.default_rng(0)
+
+    q, r, w = 8, 1 << 14, 8
+    db_t = jnp.asarray(rng.integers(0, 1 << 32, size=(w, r),
+                                    dtype=np.uint32))
+    bits = jnp.asarray(rng.integers(0, 2, size=(q, r), dtype=np.uint32))
+    t = timeit(lambda: ops.dpxor_transposed(db_t, bits, tile_r=4096))
+    csv.add("dpxor", f"q{q}_r{r}_w{w}", t * 1e6,
+            (db_t.size + bits.size) * 4 / (1 << 20))
+
+    n = 1 << 12
+    seeds = jnp.asarray(rng.integers(0, 1 << 32, size=(n, 4),
+                                     dtype=np.uint32))
+    tb = jnp.asarray(rng.integers(0, 2, size=(n,), dtype=np.uint32))
+    cw_s = jnp.asarray(rng.integers(0, 1 << 32, size=(4,), dtype=np.uint32))
+    cw_t = jnp.asarray(rng.integers(0, 2, size=(2,), dtype=np.uint32))
+    t = timeit(lambda: ops.ggm_expand(seeds, tb, cw_s, cw_t))
+    csv.add("ggm_expand", f"n{n}", t * 1e6, seeds.size * 4 * 3 / (1 << 20))
+
+    q2, r2, l2 = 8, 1 << 12, 128
+    s = jnp.asarray(rng.integers(-128, 128, size=(q2, r2), dtype=np.int8))
+    d = jnp.asarray(rng.integers(-128, 128, size=(r2, l2), dtype=np.int8))
+    t = timeit(lambda: ops.pir_gemm(s, d))
+    csv.add("pir_matmul", f"q{q2}_r{r2}_l{l2}", t * 1e6,
+            (s.size + d.size) / (1 << 20))
+    return csv
+
+
+if __name__ == "__main__":
+    print(run().dump())

@@ -1,0 +1,53 @@
+"""Shared benchmark utilities.
+
+Measurement discipline on this container: single CPU core, so DBs are
+scaled down (≤ 2^18 items) and every number is labeled either
+``measured-cpu`` (wall clock here) or ``modeled-v5e`` (three-term roofline
+with the assignment's hardware constants, driven by the dry-run artifacts).
+The measured numbers compare *algorithm structure* (phase-split vs fused vs
+batched-GEMM) on identical silicon — the paper's CPU-vs-PIM axis maps onto
+the modeled numbers, where aggregate bandwidth is the variable.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+import numpy as np
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time (s) of jitted fn; blocks on results."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+class Csv:
+    def __init__(self, header: List[str]):
+        self.header = header
+        self.rows: List[list] = []
+
+    def add(self, *row):
+        assert len(row) == len(self.header)
+        self.rows.append(list(row))
+
+    def dump(self) -> str:
+        out = [",".join(self.header)]
+        for r in self.rows:
+            out.append(",".join(_fmt(v) for v in r))
+        return "\n".join(out)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

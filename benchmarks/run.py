@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``python -m benchmarks.run`` runs everything and prints labeled CSV blocks;
+``--only fig9`` runs one. Roofline-table regeneration from the dry-run
+artifacts lives in ``python -m repro.launch.report`` (reads
+results/dryrun.jsonl), not here — these are the paper-figure benches.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = ["fig3", "fig9", "fig10_table1", "fig11", "fig12", "kernels"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=BENCHES)
+    args = ap.parse_args(argv)
+    names = [args.only] if args.only else BENCHES
+    rc = 0
+    for name in names:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            csv = mod.run()
+        except Exception as e:      # report and continue
+            print(f"== bench_{name}: FAILED {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            rc = 1
+            continue
+        print(f"== bench_{name} ({time.time() - t0:.1f}s) ==")
+        print(csv.dump())
+        print()
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,112 @@
+"""Private-embedding LM serving — the Lam et al. [61] use case end-to-end.
+
+A client runs a small LM but must not reveal its token stream to the
+embedding-table host (on-device ML inference with server-side tables).
+Per generated token:
+
+  1. the client DPF-encodes the token id into two keys,
+  2. two non-colluding servers answer with XOR shares of the embedding
+     row (bf16 bit-exact — the table is served as uint32 words),
+  3. the client reconstructs the row, runs the transformer locally, and
+     greedily picks the next token.
+
+Batched requests: several concurrent streams share each PIR step (the
+paper's query batching, §3.4).
+
+Run:  PYTHONPATH=src python examples/private_inference.py [--tokens 8]
+"""
+import argparse
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, PIRConfig
+from repro.core import pir
+from repro.launch.mesh import make_local_mesh
+from repro.models import build_model
+from repro.models.layers import pad_vocab
+from repro.runtime.serve_loop import TwoServerPIR
+
+
+def table_as_words(table_bf16: np.ndarray) -> np.ndarray:
+    """[V, d] bf16 -> [V, d/2] uint32 (PIR payload view)."""
+    u16 = table_bf16.view(np.uint16).astype(np.uint32)
+    return (u16[:, 1::2] << 16) | u16[:, 0::2]
+
+
+def words_as_rows(words: np.ndarray, d: int):
+    out = np.empty(words.shape[:-1] + (d,), np.uint16)
+    out[..., 0::2] = (words & 0xFFFF).astype(np.uint16)
+    out[..., 1::2] = (words >> 16).astype(np.uint16)
+    return out.view(jnp.bfloat16.dtype)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--streams", type=int, default=2)
+    args = ap.parse_args(argv)
+
+    cfg = ModelConfig(name="pi-lm", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=1 << 10,
+                      attn_chunk=16)
+    model = build_model(cfg, remat="none")
+    params = model.init_params(jax.random.PRNGKey(0))
+
+    # The embedding table is the PIR database (vocab padded to 2^k rows).
+    table = np.asarray(params["embed"], jnp.bfloat16)
+    v_pow2 = 1 << (pad_vocab(cfg.vocab) - 1).bit_length()
+    table_padded = np.zeros((v_pow2, cfg.d_model), jnp.bfloat16)
+    table_padded[: table.shape[0]] = table
+    words = table_as_words(table_padded)
+
+    pir_cfg = PIRConfig(n_items=v_pow2, item_bytes=cfg.d_model * 2,
+                        batch_queries=args.streams)
+    mesh = make_local_mesh()
+    servers = TwoServerPIR(words, pir_cfg, mesh, path="fused",
+                           n_queries=args.streams)
+
+    B = args.streams
+    prompt = np.asarray([[3 + i, 17, 41] for i in range(B)], np.int32)
+
+    # --- client-side embedding via PIR, trunk runs locally ---------------
+    def embed_private(token_ids) -> jax.Array:
+        rows = servers.query(list(int(t) for t in token_ids))
+        return jnp.asarray(words_as_rows(rows, cfg.d_model))
+
+    def forward_from_embeds(embeds):
+        # teacher-forced trunk pass given client-reconstructed embeddings
+        x = embeds
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, _, _ = model._scan_stack(params["dense_layers"], x, positions,
+                                    moe_layer=False, want_cache=False)
+        from repro.models import layers as L
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return L.unembed(x, params["unembed"], cfg.vocab)
+
+    stream = prompt
+    pir_queries = 0
+    for step in range(args.tokens):
+        embeds = jnp.stack([
+            embed_private(stream[:, t]) for t in range(stream.shape[1])
+        ], axis=1)          # [B, T, d] — every lookup was private
+        pir_queries += stream.shape[1] * 1
+        logits = forward_from_embeds(embeds)
+        nxt = np.asarray(jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1),
+                         np.int32)
+        stream = np.concatenate([stream, nxt[:, None]], axis=1)
+        print(f"step {step}: +{nxt.tolist()}")
+
+    # verify privacy-path embeddings match plain lookups bit-exactly
+    plain = np.asarray(params["embed"])[stream[:, -1]]
+    priv = np.asarray(embed_private(stream[:, -1]))
+    assert np.array_equal(plain.view(np.uint16), priv.view(np.uint16))
+    print(f"generated streams:\n{stream}")
+    print(f"PIR-backed lookups were bit-exact; "
+          f"{pir_queries} private queries issued.")
+
+
+if __name__ == "__main__":
+    main()

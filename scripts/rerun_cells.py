@@ -1,0 +1,16 @@
+"""Remove stale records for given cells from dryrun.jsonl (so the driver
+re-runs them with current code)."""
+import json, sys
+
+path = "results/dryrun.jsonl"
+drop = set()
+for spec in sys.argv[1:]:
+    kind, arch, shape, mesh = spec.split("/")
+    drop.add((kind, arch, shape, mesh))
+rows = [json.loads(l) for l in open(path)]
+kept = [r for r in rows
+        if (r.get("kind"), r["arch"], r["shape"], r["mesh"]) not in drop]
+with open(path, "w") as f:
+    for r in kept:
+        f.write(json.dumps(r) + "\n")
+print(f"dropped {len(rows)-len(kept)} records, kept {len(kept)}")

@@ -1,0 +1,2 @@
+from repro.analysis import hlo_cost, roofline
+__all__ = ["hlo_cost", "roofline"]

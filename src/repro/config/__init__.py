@@ -1,0 +1,31 @@
+"""Configuration system: typed dataclasses + a named registry.
+
+Every run is described by a ``RunConfig`` = (model, shape, mesh, runtime knobs).
+Architecture files under ``repro.configs`` register their full and smoke
+configurations here; the launchers resolve them by name (``--arch``).
+"""
+from repro.config.base import (
+    AttentionKind,
+    MeshConfig,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    OptimizerConfig,
+    PIRConfig,
+    RunConfig,
+    ShapeConfig,
+    SSMConfig,
+)
+
+__all__ = [
+    "AttentionKind",
+    "MeshConfig",
+    "MLAConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "OptimizerConfig",
+    "PIRConfig",
+    "RunConfig",
+    "ShapeConfig",
+    "SSMConfig",
+]

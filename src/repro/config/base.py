@@ -1,0 +1,267 @@
+"""Typed configuration dataclasses.
+
+Design notes
+------------
+* Configs are frozen dataclasses so they can be hashed into jit static args
+  and embedded in checkpoint manifests.
+* ``ModelConfig`` is a superset config: family-specific blocks (MoE, MLA, SSM)
+  are optional sub-configs, ``None`` when absent. The model zoo dispatches on
+  ``family``.
+* Everything serializes to/from plain dicts (``to_dict``/``from_dict``) for
+  the checkpoint manifest and the dry-run JSONL records.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+
+class AttentionKind(str, enum.Enum):
+    GQA = "gqa"          # grouped-query attention (MHA when kv == heads)
+    MLA = "mla"          # DeepSeek multi-head latent attention
+    NONE = "none"        # attention-free block stacks (pure SSM)
+
+
+def _asdict(obj: Any) -> Any:
+    if dataclasses.is_dataclass(obj):
+        return {k: _asdict(v) for k, v in dataclasses.asdict(obj).items()}
+    if isinstance(obj, enum.Enum):
+        return obj.value
+    return obj
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block parameters."""
+    n_experts: int
+    top_k: int
+    d_expert: int                  # per-expert FFN hidden width
+    n_shared: int = 0              # always-on shared experts (DeepSeek style)
+    capacity_factor: float = 1.25  # per-expert token capacity multiplier
+    router_dtype: str = "float32"
+    # layers [0, first_dense) use a dense FFN instead of MoE (DeepSeek-V3: 3)
+    first_dense: int = 0
+    dense_d_ff: int = 0            # width of those dense layers (0 = d_ff)
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head latent attention (DeepSeek-V2/V3) dimensions."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """State-space / recurrent block parameters (Mamba2, xLSTM)."""
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    headdim: int = 64
+    chunk: int = 256               # chunkwise-parallel scan block length
+    # zamba2: a weight-shared attention block every `shared_attn_every` layers
+    shared_attn_every: int = 0
+    # xlstm: block pattern, e.g. ("mlstm", "slstm") alternating
+    block_pattern: Tuple[str, ...] = ()
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    attention: AttentionKind = AttentionKind.GQA
+    qk_norm: bool = False
+    pos_kind: str = "rope"         # rope | learned (whisper decoder)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # enc-dec (whisper): encoder depth/length; 0 = decoder-only
+    n_encoder_layers: int = 0
+    encoder_len: int = 0
+    # modality frontend stub: number of prefix embedding tokens fed by client
+    n_frontend_tokens: int = 0
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    mtp: bool = False              # DeepSeek multi-token-prediction head
+    dtype: str = "bfloat16"
+    # attention score chunking (flash-style scan) block size
+    attn_chunk: int = 1024
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        """Analytic parameter count (used for 6·N·D roofline terms)."""
+        d, v = self.d_model, self.vocab
+        hd = self.resolved_head_dim
+        n_emb = v * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.attention == AttentionKind.MLA and self.mla is not None:
+            m = self.mla
+            qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+            per_layer += d * m.q_lora_rank + m.q_lora_rank * self.n_heads * qk_head
+            per_layer += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+            per_layer += m.kv_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+            per_layer += self.n_heads * m.v_head_dim * d
+        elif self.attention == AttentionKind.GQA:
+            per_layer += d * self.n_heads * hd          # q
+            per_layer += 2 * d * self.n_kv_heads * hd   # k, v
+            per_layer += self.n_heads * hd * d          # o
+        if self.ssm is not None and self.family in ("ssm", "hybrid"):
+            s = self.ssm
+            d_inner = s.expand * d
+            if self.family == "ssm":
+                # xlstm: mLSTM ≈ in 2·d·di + qkv 3·di² + out di·d; sLSTM 9d²
+                per_layer_ssm = 2 * d * d_inner + 3 * d_inner * d_inner \
+                    + d_inner * d
+            else:
+                # mamba2: in_proj + conv + out_proj
+                hd = s.headdim or max(1, d_inner // max(self.n_heads, 1))
+                nh = d_inner // hd
+                per_layer_ssm = d * (2 * d_inner + 2 * s.d_state + nh)
+                per_layer_ssm += d_inner * d + s.d_conv * (
+                    d_inner + 2 * s.d_state)
+            # hybrid: the mamba trunk is every layer; the GQA params
+            # computed above belong to the single weight-shared block
+            self_shared_attn = per_layer if self.family == "hybrid" else 0
+            per_layer = per_layer_ssm
+        if self.moe is not None:
+            m = self.moe
+            n_moe_layers = self.n_layers - m.first_dense
+            ff = 3 * d * m.d_expert
+            per_layer_moe = m.n_experts * ff + m.n_shared * ff + d * m.n_experts
+            dense_ff = 3 * d * (m.dense_d_ff or self.d_ff)
+            total_ffn = n_moe_layers * per_layer_moe + m.first_dense * dense_ff
+        elif self.family == "hybrid":
+            # FFN + attention live in the single weight-shared block:
+            # counted once (weight-tied), not per layer
+            total_ffn = 3 * d * self.d_ff + self_shared_attn
+        elif self.family == "audio":
+            total_ffn = (self.n_layers + self.n_encoder_layers) \
+                * 2 * d * self.d_ff          # GELU two-matrix MLP
+        elif self.d_ff > 0:
+            total_ffn = self.n_layers * 3 * d * self.d_ff
+        else:
+            total_ffn = 0
+        layers = self.n_layers + self.n_encoder_layers
+        return n_emb + layers * per_layer + total_ffn + layers * 2 * d
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only routed top-k + shared)."""
+        if self.moe is None:
+            return self.n_params()
+        m = self.moe
+        d = self.d_model
+        ff = 3 * d * m.d_expert
+        total = self.n_params()
+        n_moe_layers = self.n_layers - m.first_dense
+        inactive = n_moe_layers * (m.n_experts - m.top_k) * ff
+        return total - inactive
+
+    def to_dict(self) -> dict:
+        return _asdict(self)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """An assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+    def to_dict(self) -> dict:
+        return _asdict(self)
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    def to_dict(self) -> dict:
+        return _asdict(self)
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | adafactor | sgd
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    # cross-pod gradient compression (int8 + error feedback)
+    compress_grads: bool = False
+
+    def to_dict(self) -> dict:
+        return _asdict(self)
+
+
+@dataclass(frozen=True)
+class PIRConfig:
+    """Paper-side configuration: one PIR database + protocol choices."""
+    n_items: int                   # N: number of DB records (power of two)
+    item_bytes: int = 32           # L: record payload (paper: 32-byte hashes)
+    mode: str = "xor"              # xor (paper-faithful) | additive (MXU)
+    n_servers: int = 2
+    clusters: int = 1              # DPU clusters (paper §3.4)
+    batch_queries: int = 32        # concurrent queries per step
+    prf: str = "chacha12"          # chacha12 | chacha8 (pluggable ARX PRG)
+    fused_kernel: bool = False     # fused GGM-expand + dpXOR (beyond paper)
+
+    @property
+    def log_n(self) -> int:
+        return (self.n_items - 1).bit_length()
+
+    @property
+    def db_bytes(self) -> int:
+        return self.n_items * self.item_bytes
+
+    def to_dict(self) -> dict:
+        return _asdict(self)
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    mesh: MeshConfig
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    # gradient-accumulation microbatches per step (1 = none)
+    microbatches: int = 1
+    remat: str = "block"           # none | block (remat each scanned layer)
+    # FSDP/ZeRO-3: shard stacked-layer param dims over `data`; under scan
+    # GSPMD gathers one layer's weights just-in-time per iteration.
+    # Required for grok-1/deepseek-v3 (params exceed TP-only HBM).
+    fsdp: bool = False
+    private_embed: bool = False    # serve embeddings through PIR
+    pir: Optional[PIRConfig] = None
+    seed: int = 0
+
+    def to_dict(self) -> dict:
+        return _asdict(self)

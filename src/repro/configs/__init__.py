@@ -1,0 +1,62 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher.
+
+Each module under this package defines FULL (the assigned published config)
+and SMOKE (a reduced same-family config runnable on one CPU device).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.config import ModelConfig
+from repro.configs import (
+    deepseek_v3_671b,
+    granite_3_2b,
+    grok_1_314b,
+    llava_next_34b,
+    qwen3_4b,
+    stablelm_3b,
+    starcoder2_3b,
+    whisper_small,
+    xlstm_350m,
+    zamba2_7b,
+)
+from repro.configs.pir import PIR_CONFIGS
+from repro.configs.shapes import SHAPES, get_shape
+
+_MODULES = {
+    "granite-3-2b": granite_3_2b,
+    "qwen3-4b": qwen3_4b,
+    "starcoder2-3b": starcoder2_3b,
+    "stablelm-3b": stablelm_3b,
+    "whisper-small": whisper_small,
+    "xlstm-350m": xlstm_350m,
+    "llava-next-34b": llava_next_34b,
+    "grok-1-314b": grok_1_314b,
+    "deepseek-v3-671b": deepseek_v3_671b,
+    "zamba2-7b": zamba2_7b,
+}
+
+ARCHS: Dict[str, ModelConfig] = {k: m.FULL for k, m in _MODULES.items()}
+SMOKES: Dict[str, ModelConfig] = {k: m.SMOKE for k, m in _MODULES.items()}
+
+# pure full-attention archs skip long_500k (sub-quadratic required; see
+# DESIGN.md §4 shape-grid skips). SSM/hybrid run it.
+LONG_CONTEXT_ARCHS = ("xlstm-350m", "zamba2-7b")
+
+
+def get_arch(name: str, *, smoke: bool = False) -> ModelConfig:
+    table = SMOKES if smoke else ARCHS
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(table)}")
+    return table[name]
+
+
+def cell_is_skipped(arch: str, shape_name: str) -> bool:
+    """True when an (arch × shape) cell is excluded by the assignment rules."""
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return True
+    return False
+
+
+__all__ = ["ARCHS", "SMOKES", "PIR_CONFIGS", "SHAPES", "LONG_CONTEXT_ARCHS",
+           "get_arch", "get_shape", "cell_is_skipped"]

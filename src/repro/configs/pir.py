@@ -1,0 +1,33 @@
+"""PIR database configurations — the paper's own evaluation grid (§5.2).
+
+Records are 32-byte hashes (SHA-256-sized, the paper's CT / credential-
+checking format). DB sizes mirror the paper's 0.5–8 GB sweep; n_items is
+db_bytes / 32 and always a power of two (the GGM tree domain).
+"""
+from repro.config import PIRConfig
+
+# paper evaluation points (Figure 9): 0.5, 1, 2, 4, 8 GB
+PIR_512M = PIRConfig(n_items=1 << 24, item_bytes=32)
+PIR_1G = PIRConfig(n_items=1 << 25, item_bytes=32)
+PIR_2G = PIRConfig(n_items=1 << 26, item_bytes=32)
+PIR_4G = PIRConfig(n_items=1 << 27, item_bytes=32)
+PIR_8G = PIRConfig(n_items=1 << 28, item_bytes=32)
+
+# additive-share mode (the MXU batched-matmul path, beyond-paper)
+PIR_1G_ADD = PIRConfig(n_items=1 << 25, item_bytes=32, mode="additive")
+
+# CPU-container scale for tests/benches
+PIR_SMOKE = PIRConfig(n_items=1 << 14, item_bytes=32, batch_queries=4)
+PIR_SMOKE_ADD = PIRConfig(n_items=1 << 14, item_bytes=32, mode="additive",
+                          batch_queries=4)
+
+PIR_CONFIGS = {
+    "pir-512m": PIR_512M,
+    "pir-1g": PIR_1G,
+    "pir-2g": PIR_2G,
+    "pir-4g": PIR_4G,
+    "pir-8g": PIR_8G,
+    "pir-1g-add": PIR_1G_ADD,
+    "pir-smoke": PIR_SMOKE,
+    "pir-smoke-add": PIR_SMOKE_ADD,
+}

@@ -1,0 +1,276 @@
+"""Distributed point functions (DPF) — the cryptographic core of IM-PIR.
+
+Implements the two-party GGM-tree DPF of Gilboa–Ishai [35] with the
+Boyle–Gilboa–Ishai correction-word optimization — the same construction the
+paper adopts from Lam et al. [61] (§3.1–3.2): each key is a root seed plus
+one correction word per tree level (the paper's "two 2-dimensional
+codewords C0, C1 ∈ F_{2^λ}^{2×(log N + 1)}").
+
+TPU adaptation (DESIGN.md §2): the paper evaluates the tree on the host CPU
+with AES-NI because UPMEM DPUs cannot run AES efficiently and level-by-level
+sharing would require inter-DPU communication. Here the PRG is an ARX
+permutation (crypto/chacha.py) that vectorizes over 32-bit VPU lanes, so
+full-domain evaluation runs *on-device*, breadth-first, one `ggm_double`
+call per level — and, crucially, each database shard evaluates only its own
+leaf range (`eval_range`): a path descent to the shard's subtree root
+followed by local breadth-first expansion. No cross-shard communication,
+which is exactly the property the paper could not get from UPMEM.
+
+Output modes
+------------
+bits   leaf control bits t(j): t0(j) XOR t1(j) = 1{j == alpha}.
+       This is the selection vector of the paper's dpXOR stage.
+words  additive shares over Z_{2^32}^W: y0(j) + y1(j) = beta * 1{j == alpha}.
+bytes  additive shares over Z_256: the MXU-friendly int8 form used by the
+       batched-query matmul path (beyond-paper; see kernels/pir_matmul.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.crypto.chacha import ggm_double, prg_bits
+
+U32 = jnp.uint32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class DPFKey:
+    """One party's DPF key (a pytree; vmap-able over a batch of queries).
+
+    Attributes:
+      party:     0 or 1 (static).
+      log_n:     tree depth = log2(domain size) (static).
+      root_seed: [4] uint32 — 128-bit root seed.
+      cw_seed:   [log_n, 4] uint32 — per-level seed correction words.
+      cw_t:      [log_n, 2] uint32 — per-level (tL, tR) control corrections.
+      cw_final:  [W] uint32 / int32 payload correction (None in bit mode).
+      rounds:    PRG rounds (static).
+    """
+    party: int
+    log_n: int
+    root_seed: jax.Array
+    cw_seed: jax.Array
+    cw_t: jax.Array
+    cw_final: Optional[jax.Array]
+    rounds: int = 12
+
+    def tree_flatten(self):
+        children = (self.root_seed, self.cw_seed, self.cw_t, self.cw_final)
+        aux = (self.party, self.log_n, self.rounds)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        party, log_n, rounds = aux
+        root_seed, cw_seed, cw_t, cw_final = children
+        return cls(party, log_n, root_seed, cw_seed, cw_t, cw_final, rounds)
+
+
+# ---------------------------------------------------------------------------
+# Key generation (client side; paper Algorithm 1, GENERATEANDSENDKEYS)
+# ---------------------------------------------------------------------------
+
+def gen_keys(
+    rng: np.random.Generator,
+    alpha: int,
+    log_n: int,
+    *,
+    payload: Optional[np.ndarray] = None,
+    payload_mod: int = 1 << 32,  # retained for API clarity; arithmetic is native u32 wrap
+    rounds: int = 12,
+) -> Tuple[DPFKey, DPFKey]:
+    """Gen(1^λ, α, β) -> (k0, k1). See module docstring."""
+    if not (0 <= alpha < (1 << log_n)):
+        raise ValueError(f"alpha={alpha} out of domain 2^{log_n}")
+    root = [
+        jnp.asarray(rng.integers(0, 1 << 32, size=4, dtype=np.uint32)),
+        jnp.asarray(rng.integers(0, 1 << 32, size=4, dtype=np.uint32)),
+    ]
+    s = [root[0], root[1]]
+    t = [jnp.asarray(0, U32), jnp.asarray(1, U32)]
+    cw_seeds, cw_ts = [], []
+    for level in range(log_n):
+        bit = (alpha >> (log_n - 1 - level)) & 1
+        exp = [ggm_double(s[b], rounds=rounds) for b in (0, 1)]
+        s_l = [e[0] for e in exp]
+        t_l = [e[1] for e in exp]
+        s_r = [e[2] for e in exp]
+        t_r = [e[3] for e in exp]
+        s_cw = (s_l[0] ^ s_l[1]) if bit else (s_r[0] ^ s_r[1])
+        t_cw_l = t_l[0] ^ t_l[1] ^ U32(bit) ^ U32(1)
+        t_cw_r = t_r[0] ^ t_r[1] ^ U32(bit)
+        cw_seeds.append(s_cw)
+        cw_ts.append(jnp.stack([t_cw_l, t_cw_r]))
+        new_s, new_t = [], []
+        for b in (0, 1):
+            keep_s = s_r[b] if bit else s_l[b]
+            keep_t = t_r[b] if bit else t_l[b]
+            keep_t_cw = t_cw_r if bit else t_cw_l
+            new_s.append(keep_s ^ (t[b] * s_cw))
+            new_t.append(keep_t ^ (t[b] & keep_t_cw))
+        s, t = new_s, new_t
+    cw_seed = jnp.stack(cw_seeds) if log_n else jnp.zeros((0, 4), U32)
+    cw_t = jnp.stack(cw_ts) if log_n else jnp.zeros((0, 2), U32)
+
+    cw_final = None
+    if payload is not None:
+        # All payload arithmetic is native mod-2^32 uint32 wraparound; the
+        # Z_256 byte mode masks with 0xFF at use time (256 | 2^32, so the
+        # congruence survives the reduction).
+        w = int(np.asarray(payload).shape[-1])
+        conv = [prg_bits(s[b], w, rounds=rounds) for b in (0, 1)]
+        beta = jnp.asarray(np.asarray(payload, dtype=np.uint32))
+        diff = beta - conv[0] + conv[1]
+        cw_final = jnp.where(t[1] == 1, (~diff) + U32(1), diff)
+
+    return tuple(
+        DPFKey(
+            party=b,
+            log_n=log_n,
+            root_seed=root[b],
+            cw_seed=cw_seed,
+            cw_t=cw_t,
+            cw_final=cw_final,
+            rounds=rounds,
+        )
+        for b in (0, 1)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Evaluation (server side; paper Algorithm 1, EVALUATEDPF — here on-device)
+# ---------------------------------------------------------------------------
+
+def _expand_level(seeds, t_bits, cw_seed_l, cw_t_l, rounds):
+    """One breadth-first level: [m,4] seeds -> [2m,4], leaf order preserved."""
+    s_l, t_l, s_r, t_r = ggm_double(seeds, rounds=rounds)
+    mask = t_bits[:, None] * cw_seed_l[None, :]
+    s_l = s_l ^ mask
+    s_r = s_r ^ mask
+    t_l = t_l ^ (t_bits & cw_t_l[0])
+    t_r = t_r ^ (t_bits & cw_t_l[1])
+    # interleave children so leaf j sits at index j
+    m = seeds.shape[0]
+    seeds2 = jnp.stack([s_l, s_r], axis=1).reshape(2 * m, 4)
+    t2 = jnp.stack([t_l, t_r], axis=1).reshape(2 * m)
+    return seeds2, t2
+
+
+def eval_range(
+    key: DPFKey,
+    start_block: jax.Array | int,
+    log_range: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Evaluate leaves [start_block * 2^log_range, (start_block+1) * 2^log_range).
+
+    Path-descend ``log_n - log_range`` levels (the bits of ``start_block``,
+    MSB first), then breadth-first expand the shard-local subtree. This is
+    the shard-parallel form of the paper's EVALUATEDPF: DB shard ``d`` only
+    ever computes its own Eval(k, j) slice (paper §3.3 distributes these
+    slices from the host; we never materialize the full vector anywhere).
+
+    Returns (seeds [2^log_range, 4] u32, t_bits [2^log_range] u32).
+    """
+    if log_range > key.log_n:
+        raise ValueError("log_range exceeds domain")
+    depth = key.log_n - log_range
+    start_block = jnp.asarray(start_block, U32)
+    seeds = key.root_seed
+    t = jnp.asarray(key.party, U32)
+    for level in range(depth):
+        bit = (start_block >> U32(depth - 1 - level)) & U32(1)
+        s_l, t_l, s_r, t_r = ggm_double(seeds, rounds=key.rounds)
+        s_cw = key.cw_seed[level]
+        t_cw = key.cw_t[level]
+        s_l = s_l ^ (t * s_cw)
+        s_r = s_r ^ (t * s_cw)
+        t_l = t_l ^ (t & t_cw[0])
+        t_r = t_r ^ (t & t_cw[1])
+        seeds = jnp.where(bit, s_r, s_l)
+        t = jnp.where(bit, t_r, t_l)
+    seeds = seeds[None, :]
+    t = t[None]
+    for level in range(depth, key.log_n):
+        seeds, t = _expand_level(
+            seeds, t, key.cw_seed[level], key.cw_t[level], key.rounds
+        )
+    return seeds, t
+
+
+def eval_all(key: DPFKey) -> Tuple[jax.Array, jax.Array]:
+    """Full-domain evaluation (single shard / reference path)."""
+    return eval_range(key, 0, key.log_n)
+
+
+def leaf_bits(t_bits: jax.Array) -> jax.Array:
+    """Selection bits for the dpXOR stage (paper's Eval(k, j) values)."""
+    return t_bits.astype(U32)
+
+
+def leaf_words(
+    key: DPFKey, seeds: jax.Array, t_bits: jax.Array, n_words: int
+) -> jax.Array:
+    """Additive payload shares over Z_{2^32}^W.
+
+    y_b(j) = (-1)^b * (convert(s_j) + t_j * cw_final)  mod 2^32.
+    Σ_b y_b(j) = β · 1{j == α}.
+    """
+    if key.cw_final is None:
+        raise ValueError("key was generated without a payload")
+    conv = prg_bits(seeds, n_words, rounds=key.rounds)
+    share = conv + t_bits[:, None] * key.cw_final[None, :n_words]
+    if key.party == 1:
+        share = (~share) + U32(1)  # negate mod 2^32
+    return share
+
+
+def leaf_bytes(
+    key: DPFKey, seeds: jax.Array, t_bits: jax.Array
+) -> jax.Array:
+    """Additive scalar shares over Z_256 (int8) — MXU matmul form.
+
+    Requires the key to be generated with ``payload=[1]`` and
+    ``payload_mod=256``; uses word 0 of the conversion PRG.
+    """
+    if key.cw_final is None:
+        raise ValueError("key was generated without a payload")
+    conv = prg_bits(seeds, 1, rounds=key.rounds)[:, 0] & U32(0xFF)
+    share = (conv + t_bits * (key.cw_final[0] & U32(0xFF))) & U32(0xFF)
+    if key.party == 1:
+        share = (U32(256) - share) & U32(0xFF)
+    return share.astype(jnp.uint8)
+
+
+def eval_bits_batch(keys: DPFKey, start_block, log_range) -> jax.Array:
+    """vmap'd selection-bit evaluation for a batch of stacked keys.
+
+    ``keys``: DPFKey with leading query axis on all array leaves.
+    Returns ``[Q, 2^log_range] uint32`` selection bits.
+    """
+    def one(k):
+        _, t = eval_range(k, start_block, log_range)
+        return leaf_bits(t)
+
+    return jax.vmap(one)(keys)
+
+
+def stack_keys(keys) -> DPFKey:
+    """Stack a list of same-shape DPFKeys into one batched pytree."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *keys)
+
+
+@partial(jax.jit, static_argnames=("log_range",))
+def eval_bytes_batch(keys: DPFKey, start_block, log_range: int) -> jax.Array:
+    """vmap'd Z_256 additive shares: ``[Q, 2^log_range] int8``-compatible u8."""
+    def one(k):
+        seeds, t = eval_range(k, start_block, log_range)
+        return leaf_bytes(k, seeds, t)
+
+    return jax.vmap(one)(keys)

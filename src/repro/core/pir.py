@@ -1,0 +1,172 @@
+"""Two-server PIR protocol over DPF keys (paper §2.3, §3, Algorithm 1).
+
+Roles
+-----
+Client:  ``query_gen`` (Gen + key split), ``reconstruct_*`` (r1 ⊕ r2 / r1 + r2).
+Server:  ``answer_*`` — the all-for-one scan. Single-device reference forms
+         live here; the sharded production form (shard_map over the
+         data=clusters / model=DB-shards mesh) lives in ``core.server``.
+
+Modes
+-----
+xor       paper-faithful: selection bits t(j) weight an XOR fold over DB rows
+          (Figure 2 / Algorithm 1's dpXOR). Bit-exact for arbitrary payloads.
+additive  Z_256 byte shares; the batched-query form is an int8 matrix product
+          (queries × DB) that the MXU executes natively — the beyond-paper
+          operational-intensity lever (see DESIGN.md §2, kernels/pir_matmul).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import PIRConfig
+from repro.core import dpf
+from repro.crypto.chacha import PRG_ROUNDS
+from repro.crypto.packing import words_to_bytes
+
+U32 = jnp.uint32
+
+
+# ---------------------------------------------------------------------------
+# Database
+# ---------------------------------------------------------------------------
+
+def make_database(rng: np.random.Generator, n_items: int, item_bytes: int = 32
+                  ) -> np.ndarray:
+    """Random PIR DB of ``n_items`` records, each ``item_bytes`` long.
+
+    Mirrors the paper's evaluation DB (random 32-byte/256-bit hashes, §5.2).
+    Stored as uint32 words: ``[N, item_bytes // 4]``.
+    """
+    if item_bytes % 4:
+        raise ValueError("item_bytes must be a multiple of 4")
+    return rng.integers(0, 1 << 32, size=(n_items, item_bytes // 4),
+                        dtype=np.uint32)
+
+
+def db_as_bytes(db_words: np.ndarray) -> np.ndarray:
+    """[N, W] uint32 -> [N, 4W] uint8 view for the int8-matmul path."""
+    return np.asarray(words_to_bytes(jnp.asarray(db_words)))
+
+
+# ---------------------------------------------------------------------------
+# Client
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Query:
+    """A client query: one DPF key pair (k0 to server 0, k1 to server 1)."""
+    index: int
+    keys: Tuple[dpf.DPFKey, dpf.DPFKey]
+
+
+def query_gen(rng: np.random.Generator, index: int, cfg: PIRConfig) -> Query:
+    """GENERATEANDSENDKEYS (Algorithm 1 ①-②)."""
+    rounds = PRG_ROUNDS[cfg.prf]
+    if cfg.mode == "xor":
+        keys = dpf.gen_keys(rng, index, cfg.log_n, rounds=rounds)
+    elif cfg.mode == "additive":
+        keys = dpf.gen_keys(
+            rng, index, cfg.log_n,
+            payload=np.array([1], np.uint32), payload_mod=256, rounds=rounds,
+        )
+    else:
+        raise ValueError(f"unknown PIR mode {cfg.mode!r}")
+    return Query(index=index, keys=keys)
+
+
+def batch_queries(rng: np.random.Generator, indices: Sequence[int],
+                  cfg: PIRConfig) -> Tuple[dpf.DPFKey, dpf.DPFKey]:
+    """Generate and stack a batch of queries into two batched key pytrees."""
+    qs = [query_gen(rng, i, cfg) for i in indices]
+    k0 = dpf.stack_keys([q.keys[0] for q in qs])
+    k1 = dpf.stack_keys([q.keys[1] for q in qs])
+    return k0, k1
+
+
+def reconstruct_xor(r0: jax.Array, r1: jax.Array) -> jax.Array:
+    """D[i] = r1 XOR r2 (Algorithm 1, client ⑦)."""
+    return jnp.bitwise_xor(r0, r1)
+
+
+def reconstruct_additive(r0: jax.Array, r1: jax.Array) -> jax.Array:
+    """D[i] bytes = (r0 + r1) mod 256 (int32 partial sums from the matmul)."""
+    return ((r0.astype(jnp.int32) + r1.astype(jnp.int32)) % 256).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Server: reference (single-shard) answer paths
+# ---------------------------------------------------------------------------
+
+def xor_fold(rows: jax.Array, axis: int = 0) -> jax.Array:
+    """XOR-reduce along ``axis`` (the paper's MASTERXOR stage)."""
+    return jax.lax.reduce(rows, np.uint32(0), jax.lax.bitwise_xor, (axis,))
+
+
+def dpxor(db_words: jax.Array, bits: jax.Array) -> jax.Array:
+    """Select-XOR scan: r = ⊕_{j : bits[j]=1} D[j]  (Algorithm 1 ④-⑤).
+
+    Pure-jnp reference; the Pallas kernel (kernels/dpxor.py) implements the
+    tiled two-stage parallel-reduction form of the same contraction.
+    """
+    masked = jnp.where((bits != 0)[:, None], db_words, U32(0))
+    return xor_fold(masked, 0)
+
+
+def answer_xor(db_words: jax.Array, key: dpf.DPFKey) -> jax.Array:
+    """Full single-server answer, one query: Eval + dpXOR."""
+    n = db_words.shape[0]
+    log_n = (n - 1).bit_length()
+    _, t = dpf.eval_range(key, 0, log_n)
+    return dpxor(db_words, t[:n])
+
+
+def answer_xor_batch(db_words: jax.Array, keys: dpf.DPFKey) -> jax.Array:
+    """Batched XOR answers: [Q, W]."""
+    return jax.vmap(lambda k: answer_xor(db_words, k))(keys)
+
+
+def answer_additive_matmul(db_bytes_i8: jax.Array, shares_u8: jax.Array
+                           ) -> jax.Array:
+    """Batched additive answers as one int8 GEMM.
+
+    shares_u8: [Q, N] Z_256 shares; db_bytes_i8: [N, L] DB bytes (int8 view).
+    Returns int32 partial results [Q, L]; only their value mod 256 matters,
+    and int32 wraparound preserves it (2^8 | 2^32).
+    """
+    return jax.lax.dot_general(
+        shares_u8.astype(jnp.int8), db_bytes_i8.astype(jnp.int8),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def answer_additive_batch(db_bytes_i8: jax.Array, keys: dpf.DPFKey
+                          ) -> jax.Array:
+    """Eval byte shares for each key then contract against the DB."""
+    n = db_bytes_i8.shape[0]
+    log_n = (n - 1).bit_length()
+    shares = dpf.eval_bytes_batch(keys, 0, log_n)[:, :n]
+    return answer_additive_matmul(db_bytes_i8, shares)
+
+
+# ---------------------------------------------------------------------------
+# Phase-split forms (paper Table 1 instrumentation)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("log_n",))
+def phase_eval_bits(keys: dpf.DPFKey, log_n: int) -> jax.Array:
+    """Phase ②: DPF evaluation only — materializes Eval(k, ·) bit vectors."""
+    return dpf.eval_bits_batch(keys, 0, log_n)
+
+
+@jax.jit
+def phase_dpxor(db_words: jax.Array, bits: jax.Array) -> jax.Array:
+    """Phase ④-⑤: dpXOR only, given precomputed selection bits [Q, N]."""
+    return jax.vmap(lambda b: dpxor(db_words, b))(bits)

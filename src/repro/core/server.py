@@ -1,0 +1,261 @@
+"""Sharded PIR server — the paper's Figure 5 dataflow on a TPU mesh.
+
+Topology mapping (DESIGN.md §2):
+
+  model axis  = the DPUs of one cluster. The DB is sharded over it in the
+                paper's linear layout: shard d holds rows
+                [d·B_d, (d+1)·B_d), B_d = N / |model|.
+  data (and pod) axes = DPU clusters (paper §3.4): the DB is *replicated*
+                across them and the query batch is sharded across them, so
+                clusters answer disjoint queries in parallel.
+
+Per-device step (inside shard_map) — Algorithm 1 with the host CPU removed:
+
+  ① eval own DPF leaf range   (paper: host CPU + CPU→DPU copy ②③)
+  ② select-XOR scan over the local DB rows            (paper: DPU dpXOR ④)
+  ③ XOR all-reduce of 32 B subresults over `model`    (paper: DPU→CPU copy
+     + host aggregation ⑤⑥ — here an all_gather+fold or a ppermute
+     butterfly, selectable for the §Perf collective study)
+
+Three server paths, lowered from the same factory:
+
+  baseline   paper-faithful phase split: materialize Eval(k,·) bits, then
+             scan. This is the §Perf *baseline* row.
+  fused      chunked expand+scan (lax.scan over subtree blocks): selection
+             bits never round-trip through HBM. Beyond-paper.
+  matmul     batched queries as one int8 GEMM on the MXU (additive mode).
+             Beyond-paper; turns the memory-bound scan compute-bound.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import PIRConfig
+from repro.core import dpf
+from repro.core.pir import dpxor, xor_fold
+
+U32 = jnp.uint32
+
+
+def _cluster_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _shard_axis(mesh: jax.sharding.Mesh) -> Optional[str]:
+    return "model" if "model" in mesh.axis_names else None
+
+
+def _axis_size(mesh, names) -> int:
+    n = 1
+    for a in names if isinstance(names, tuple) else (names,):
+        if a is not None:
+            n *= mesh.shape[a]
+    return n
+
+
+def key_specs(cfg: PIRConfig, n_queries: int) -> dpf.DPFKey:
+    """ShapeDtypeStruct stand-ins for a batched key pytree (dry-run input)."""
+    log_n = cfg.log_n
+    mk = lambda *s: jax.ShapeDtypeStruct((n_queries,) + s, np.uint32)
+    cw_final = None if cfg.mode == "xor" else mk(1)
+    return dpf.DPFKey(
+        party=0, log_n=log_n,
+        root_seed=mk(4), cw_seed=mk(log_n, 4), cw_t=mk(log_n, 2),
+        cw_final=cw_final, rounds=12,
+    )
+
+
+def _key_pspec(keys_like: dpf.DPFKey, cluster: Tuple[str, ...]) -> dpf.DPFKey:
+    """PartitionSpecs matching the batched-key pytree (batch axis sharded)."""
+    def spec(leaf):
+        rank = len(leaf.shape)
+        return P(cluster, *([None] * (rank - 1)))
+    return jax.tree_util.tree_map(spec, keys_like)
+
+
+def xor_allreduce_gather(partial_res: jax.Array, axis: str) -> jax.Array:
+    """XOR all-reduce via all_gather + local fold (paper's host aggregation)."""
+    gathered = jax.lax.all_gather(partial_res, axis)          # [P, ...]
+    return xor_fold(gathered, 0)
+
+
+def xor_allreduce_butterfly(partial_res: jax.Array, axis: str, size: int
+                            ) -> jax.Array:
+    """XOR all-reduce via a recursive-doubling butterfly (log P ppermutes).
+
+    Collective-study alternative for §Perf: moves the same bytes in log P
+    rounds of pairwise exchange instead of one P-way gather.
+    """
+    x = partial_res
+    n = size
+    shift = 1
+    while shift < n:
+        perm = [(i, i ^ shift) for i in range(n)]
+        x = x ^ jax.lax.ppermute(x, axis, perm)
+        shift <<= 1
+    return x
+
+
+@dataclass
+class ServeFns:
+    """Compiled server entry points for one party."""
+    serve: Callable            # (db, keys) -> per-query answer shares
+    mesh: jax.sharding.Mesh
+    db_sharding: NamedSharding
+    cfg: PIRConfig
+    n_local_queries: int       # queries per cluster per step
+
+
+def build_serve_fn(
+    cfg: PIRConfig,
+    mesh: jax.sharding.Mesh,
+    *,
+    n_queries: int,
+    path: str = "baseline",          # baseline | fused | matmul
+    chunk_log: int = 12,             # fused: leaves per expand+scan chunk
+    collective: str = "gather",      # gather | butterfly
+) -> ServeFns:
+    """Build the sharded serve function for one step of ``n_queries``."""
+    cluster = _cluster_axes(mesh)
+    shard = _shard_axis(mesh)
+    n_clusters = _axis_size(mesh, cluster)
+    n_shards = _axis_size(mesh, shard)
+    if n_queries % max(n_clusters, 1):
+        raise ValueError(f"{n_queries} queries not divisible by {n_clusters} clusters")
+    if cfg.n_items % max(n_shards, 1):
+        raise ValueError("DB size not divisible by shard count")
+    rows_local = cfg.n_items // n_shards
+    log_local = int(math.log2(rows_local))
+    if 1 << log_local != rows_local:
+        raise ValueError("per-shard row count must be a power of two")
+    words = cfg.item_bytes // 4
+
+    db_spec = P(shard, None)
+    keys_spec_builder = lambda keys: _key_pspec(keys, cluster)
+    out_spec = P(cluster, None)
+
+    def local_step(db_local, keys_local):
+        sidx = jax.lax.axis_index(shard) if shard else 0
+
+        if path == "baseline":
+            # Phase ②③: materialize selection bits for the local leaf range
+            # (the paper's host-side Eval + CPU→DPU share copy).
+            bits = dpf.eval_bits_batch(keys_local, sidx, log_local)
+            # Phase ④⑤: select-XOR scan (DPU dpXOR, two-stage reduction).
+            partial_res = jax.vmap(lambda b: dpxor(db_local, b))(bits)
+
+        elif path == "fused":
+            # Chunked expand+scan: per chunk, descend to the chunk subtree
+            # and fold its rows immediately — bits never hit HBM.
+            n_chunks = max(1, rows_local >> chunk_log)
+            clog = min(chunk_log, log_local)
+            db_c = db_local.reshape(n_chunks, rows_local // n_chunks, words)
+
+            def one_query(key):
+                def body(acc, c):
+                    blk = sidx * n_chunks + c
+                    _, t = dpf.eval_range(key, blk, clog)
+                    acc = acc ^ dpxor(db_c[c], t)
+                    return acc, ()
+                acc0 = jnp.zeros((words,), U32)
+                acc, _ = jax.lax.scan(body, acc0, jnp.arange(n_chunks, dtype=jnp.uint32))
+                return acc
+
+            partial_res = jax.vmap(one_query)(keys_local)
+
+        elif path == "matmul":
+            # Additive Z_256 shares -> one int8 GEMM for the whole batch.
+            shares = dpf.eval_bytes_batch(keys_local, sidx, log_local)
+            db_bytes = _words_to_bytes_i8(db_local)
+            part = jax.lax.dot_general(
+                shares.astype(jnp.int8), db_bytes,
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            if shard:
+                part = jax.lax.psum(part, shard)     # additive: native psum
+            return part
+
+        else:
+            raise ValueError(f"unknown path {path!r}")
+
+        # Aggregation ⑤⑥: XOR all-reduce of 32 B subresults over shards.
+        if shard:
+            if collective == "butterfly":
+                partial_res = xor_allreduce_butterfly(partial_res, shard, n_shards)
+            else:
+                partial_res = xor_allreduce_gather(partial_res, shard)
+        return partial_res
+
+    def serve(db, keys):
+        ks = keys_spec_builder(keys)
+        fn = jax.shard_map(
+            local_step, mesh=mesh,
+            in_specs=(db_spec, ks), out_specs=out_spec,
+            check_vma=False,
+        )
+        return fn(db, keys)
+
+    return ServeFns(
+        serve=serve,
+        mesh=mesh,
+        db_sharding=NamedSharding(mesh, db_spec),
+        cfg=cfg,
+        n_local_queries=n_queries // max(n_clusters, 1),
+    )
+
+
+def _words_to_bytes_i8(w: jax.Array) -> jax.Array:
+    sh = jnp.asarray([0, 8, 16, 24], dtype=U32)
+    b = (w[..., None] >> sh) & U32(0xFF)
+    return b.reshape(w.shape[:-1] + (w.shape[-1] * 4,)).astype(jnp.int8)
+
+
+class PIRServer:
+    """One logical PIR server (one of the n non-colluding parties).
+
+    Owns the device-resident DB shards and a compiled serve step. The DB is
+    preloaded once (paper §3.3 "database preloading": transfer cost excluded
+    from query latency) and donated to devices.
+    """
+
+    def __init__(
+        self,
+        party: int,
+        db_words: np.ndarray,
+        cfg: PIRConfig,
+        mesh: jax.sharding.Mesh,
+        *,
+        n_queries: int = 32,
+        path: str = "baseline",
+        collective: str = "gather",
+    ):
+        self.party = party
+        self.cfg = cfg
+        self.mesh = mesh
+        self.path = path
+        self.fns = build_serve_fn(
+            cfg, mesh, n_queries=n_queries, path=path, collective=collective
+        )
+        self.db = jax.device_put(jnp.asarray(db_words), self.fns.db_sharding)
+        self._jitted = jax.jit(self.fns.serve)
+
+    def answer(self, keys: dpf.DPFKey) -> jax.Array:
+        """Answer a batch of queries (keys stacked on the leading axis)."""
+        return self._jitted(self.db, keys)
+
+    def lower(self, n_queries: int):
+        """Lower (no execution) against ShapeDtypeStructs — dry-run entry."""
+        keys = key_specs(self.cfg, n_queries)
+        db_spec = jax.ShapeDtypeStruct(
+            (self.cfg.n_items, self.cfg.item_bytes // 4), np.uint32
+        )
+        return jax.jit(self.fns.serve).lower(db_spec, keys)

@@ -1,0 +1,18 @@
+from repro.crypto.chacha import chacha_block, ggm_double, prg_bits, PRG_ROUNDS
+from repro.crypto.packing import (
+    pack_bits_to_words,
+    unpack_words_to_bits,
+    bytes_to_words,
+    words_to_bytes,
+)
+
+__all__ = [
+    "chacha_block",
+    "ggm_double",
+    "prg_bits",
+    "PRG_ROUNDS",
+    "pack_bits_to_words",
+    "unpack_words_to_bits",
+    "bytes_to_words",
+    "words_to_bytes",
+]

@@ -1,0 +1,51 @@
+"""Bit/byte <-> uint32-word packing helpers.
+
+The PIR database stores records as uint32 words (the TPU's natural integer
+lane width); DPF selection vectors are packed 32 bits/word for the bit-sliced
+kernels. All functions are jnp-traceable.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def bytes_to_words(b: jnp.ndarray) -> jnp.ndarray:
+    """``[..., 4k] uint8 -> [..., k] uint32`` (little-endian)."""
+    if b.shape[-1] % 4:
+        raise ValueError(f"byte length {b.shape[-1]} not a multiple of 4")
+    b = b.astype(jnp.uint32).reshape(b.shape[:-1] + (b.shape[-1] // 4, 4))
+    sh = jnp.asarray([0, 8, 16, 24], dtype=jnp.uint32)
+    return jnp.sum(b << sh, axis=-1, dtype=jnp.uint32)
+
+
+def words_to_bytes(w: jnp.ndarray) -> jnp.ndarray:
+    """``[..., k] uint32 -> [..., 4k] uint8`` (little-endian)."""
+    sh = jnp.asarray([0, 8, 16, 24], dtype=jnp.uint32)
+    b = (w[..., None] >> sh) & jnp.uint32(0xFF)
+    return b.astype(jnp.uint8).reshape(w.shape[:-1] + (w.shape[-1] * 4,))
+
+
+def pack_bits_to_words(bits: jnp.ndarray) -> jnp.ndarray:
+    """``[..., 32k] {0,1} -> [..., k] uint32``; bit j of word w = bit 32w+j."""
+    n = bits.shape[-1]
+    if n % 32:
+        raise ValueError(f"bit length {n} not a multiple of 32")
+    bits = bits.astype(jnp.uint32).reshape(bits.shape[:-1] + (n // 32, 32))
+    sh = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << sh, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_words_to_bits(words: jnp.ndarray) -> jnp.ndarray:
+    """``[..., k] uint32 -> [..., 32k] uint32 in {0,1}``."""
+    sh = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> sh) & jnp.uint32(1)
+    return bits.reshape(words.shape[:-1] + (words.shape[-1] * 32,))
+
+
+def np_bytes_to_words(b: np.ndarray) -> np.ndarray:
+    """Host-side (numpy) variant for DB construction."""
+    assert b.shape[-1] % 4 == 0
+    return b.reshape(b.shape[:-1] + (-1, 4)).astype(np.uint32) @ (
+        np.uint32(1) << np.arange(0, 32, 8, dtype=np.uint32)
+    ).astype(np.uint32)

@@ -1,0 +1,2 @@
+from repro.data.pipeline import TokenPipeline, QueryPipeline
+__all__ = ["TokenPipeline", "QueryPipeline"]

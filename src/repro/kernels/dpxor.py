@@ -1,0 +1,111 @@
+"""dpXOR Pallas kernel — the paper's Algorithm 1 ④-⑤ on TPU.
+
+Paper analogue
+--------------
+Each UPMEM DPU holds a DB chunk in MRAM and runs a two-stage parallel
+reduction: tasklets XOR-fold disjoint row ranges into partials (stage 1,
+``TASKLETXOR``), then a master tasklet folds the partials (stage 2,
+``MASTERXOR``). MRAM→WRAM DMA streams the rows through the 64 KB scratchpad.
+
+TPU mapping (DESIGN.md §2)
+--------------------------
+  MRAM chunk        -> HBM-resident DB shard
+  WRAM staging      -> VMEM tiles via BlockSpec (``TILE_R`` rows per grid step)
+  tasklet partials  -> the VMEM accumulator updated across sequential grid
+                       steps (stage 1); the in-tile halving fold (stage 2)
+  24 tasklets       -> the VPU's lane parallelism inside one tile
+
+Layout: the kernel consumes the DB *word-transposed* — ``db_t[W, R]`` — so
+that the long row axis ``R`` is the TPU lane dimension (records are W≈8
+words; leaving W in lanes would waste 15/16 of each 8×128 vreg). The fold
+over selected rows is a lane-dimension halving reduction, which lowers to
+cheap vector shifts.
+
+Masking: selection bits b∈{0,1} become full-word masks ``0 - b`` (0x0 or
+0xFFFFFFFF), so "include row j iff Eval(k,j)=1" is a single AND — the
+branchless form of the paper's ``if v[j] = 1`` (Algorithm 1 line 33).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+U32 = jnp.uint32
+
+
+def _fold_xor_lanes(x: jax.Array) -> jax.Array:
+    """XOR-fold the (power-of-two) last axis by repeated halving.
+
+    [..., 2m] -> [..., 1]. The halving schedule is the vectorized form of the
+    paper's two-stage reduction: each halving step is "all tasklets fold in
+    parallel"; the final scalar is the master-tasklet result.
+    """
+    n = x.shape[-1]
+    while n > 1:
+        half = n // 2
+        x = jax.lax.bitwise_xor(x[..., :half], x[..., half:])
+        n = half
+    return x
+
+
+def _dpxor_kernel(bits_ref, db_ref, out_ref, *, tile_r: int):
+    """One grid step: fold ``tile_r`` rows of the DB into the accumulator.
+
+    bits_ref: [Q, TILE_R] u32 selection bits for this row tile.
+    db_ref:   [W, TILE_R] u32 word-transposed DB tile (VMEM).
+    out_ref:  [Q, W]      u32 accumulator; same block for every grid step.
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bits = bits_ref[...]                      # [Q, TILE_R]
+    db_t = db_ref[...]                        # [W, TILE_R]
+    mask = jnp.uint32(0) - bits               # 0x00000000 / 0xFFFFFFFF
+    # [Q, 1, TILE_R] & [1, W, TILE_R] -> [Q, W, TILE_R]
+    masked = mask[:, None, :] & db_t[None, :, :]
+    out_ref[...] ^= _fold_xor_lanes(masked)[..., 0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r", "interpret"))
+def dpxor_t(
+    db_t: jax.Array,
+    bits: jax.Array,
+    *,
+    tile_r: int = 2048,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched select-XOR scan over a word-transposed DB shard.
+
+    Args:
+      db_t:  ``[W, R] uint32`` — DB shard, words-major (R = rows, power of 2).
+      bits:  ``[Q, R] uint32`` — per-query selection bits (DPF leaf bits).
+      tile_r: rows staged through VMEM per grid step (the WRAM-analogue).
+      interpret: run the kernel body in interpret mode (CPU validation).
+
+    Returns ``[Q, W] uint32`` — per-query XOR subresults (the DPU's s_d).
+    """
+    w, r = db_t.shape
+    q = bits.shape[0]
+    if bits.shape[1] != r:
+        raise ValueError(f"bits {bits.shape} mismatch with db {db_t.shape}")
+    tile_r = min(tile_r, r)
+    if r % tile_r:
+        raise ValueError(f"rows {r} not divisible by tile_r {tile_r}")
+    if tile_r & (tile_r - 1):
+        raise ValueError("tile_r must be a power of two")
+    grid = (r // tile_r,)
+    return pl.pallas_call(
+        functools.partial(_dpxor_kernel, tile_r=tile_r),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q, tile_r), lambda i: (0, i)),
+            pl.BlockSpec((w, tile_r), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((q, w), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, w), U32),
+        interpret=interpret,
+    )(bits.astype(U32), db_t.astype(U32))

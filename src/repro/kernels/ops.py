@@ -1,0 +1,128 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+These wrappers own layout conversion (row-major DB <-> the kernels' word-
+transposed form), tile selection, and the interpret-mode switch: on the CPU
+container every kernel body executes in Pallas interpret mode (bit-exact
+Python evaluation); on a real TPU backend ``interpret=False`` compiles the
+same BlockSpec program to Mosaic.
+
+The PIR server (core/server.py) calls these when ``use_kernels=True``; the
+pure-jnp forms in kernels/ref.py remain the oracles and the GSPMD dry-run
+path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dpxor import dpxor_t
+from repro.kernels.ggm_expand import ggm_expand_level
+from repro.kernels.pir_matmul import pir_matmul
+
+U32 = jnp.uint32
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    """Interpret-mode default: real Mosaic only on an actual TPU backend."""
+    return not _on_tpu()
+
+
+# ---------------------------------------------------------------------------
+# dpXOR
+# ---------------------------------------------------------------------------
+
+def dpxor(db_words: jax.Array, bits: jax.Array, *, tile_r: int = 2048,
+          interpret: bool | None = None) -> jax.Array:
+    """Select-XOR scan, row-major DB: [R, W] u32 × [Q, R] bits -> [Q, W].
+
+    Transposes to the kernel's word-major layout; production servers keep
+    the DB pre-transposed and call :func:`dpxor_transposed` to avoid paying
+    the transpose per query batch.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return dpxor_t(db_words.T, bits, tile_r=min(tile_r, db_words.shape[0]),
+                   interpret=interpret)
+
+
+def dpxor_transposed(db_t: jax.Array, bits: jax.Array, *, tile_r: int = 2048,
+                     interpret: bool | None = None) -> jax.Array:
+    """Select-XOR scan on a pre-transposed [W, R] DB shard."""
+    if interpret is None:
+        interpret = default_interpret()
+    return dpxor_t(db_t, bits, tile_r=min(tile_r, db_t.shape[1]),
+                   interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# GGM expansion
+# ---------------------------------------------------------------------------
+
+def ggm_expand(seeds: jax.Array, t_bits: jax.Array, cw_seed: jax.Array,
+               cw_t: jax.Array, *, rounds: int = 12, tile: int = 65536,
+               interpret: bool | None = None):
+    """One corrected GGM level, leaf-major: [n,4] -> ([2n,4], [2n]).
+
+    Wraps the lane-parallel kernel with the transpose + child interleave so
+    callers see the same contract as ``core.dpf._expand_level``.
+
+    Note on ``tile``: on the CPU container, XLA compile time of the
+    interpret-mode emulation grows superlinearly in (chacha rounds × grid
+    steps), so the default tile keeps grid=1 for any realistic test size.
+    On TPU (interpret=False) the intended production tile is 512–2048 lanes
+    (VMEM: 16 state rows × tile × 4 B ≲ 128 KB per step).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n = seeds.shape[0]
+    children_t, t2 = ggm_expand_level(
+        seeds.T, t_bits, cw_seed, cw_t,
+        rounds=rounds, tile=min(tile, n), interpret=interpret,
+    )
+    # children_t: [8, n] (rows 0:4 = left seed words, 4:8 = right).
+    left = children_t[0:4, :].T                   # [n, 4]
+    right = children_t[4:8, :].T                  # [n, 4]
+    children = jnp.stack([left, right], axis=1).reshape(2 * n, 4)
+    t_out = jnp.stack([t2[0, :], t2[1, :]], axis=1).reshape(2 * n)
+    return children, t_out
+
+
+def ggm_eval_leaves(key_root: jax.Array, key_t0: jax.Array,
+                    cw_seed: jax.Array, cw_t: jax.Array, log_n: int,
+                    *, rounds: int = 12, interpret: bool | None = None):
+    """Full-domain GGM leaf expansion driven by the Pallas level kernel.
+
+    key_root [4], key_t0 scalar, cw_seed [log_n, 4], cw_t [log_n, 2]
+    -> (seeds [2^log_n, 4], t_bits [2^log_n]).
+    """
+    seeds = key_root[None, :]
+    t = jnp.asarray(key_t0, U32)[None]
+    for level in range(log_n):
+        seeds, t = ggm_expand(seeds, t, cw_seed[level], cw_t[level],
+                              rounds=rounds, interpret=interpret)
+    return seeds, t
+
+
+# ---------------------------------------------------------------------------
+# PIR matmul
+# ---------------------------------------------------------------------------
+
+def pir_gemm(shares: jax.Array, db_bytes: jax.Array, *, tile_q: int = 8,
+             tile_r: int = 1024, tile_l: int = 128,
+             interpret: bool | None = None) -> jax.Array:
+    """Batched additive-PIR contraction: [Q, R] i8 × [R, L] i8 -> [Q, L] i32."""
+    if interpret is None:
+        interpret = default_interpret()
+    q, r = shares.shape
+    l = db_bytes.shape[1]
+    return pir_matmul(
+        shares, db_bytes,
+        tile_q=min(tile_q, q), tile_r=min(tile_r, r), tile_l=min(tile_l, l),
+        interpret=interpret,
+    )

@@ -1,0 +1,82 @@
+"""Batched-query PIR as an int8 GEMM — the MXU operational-intensity lever.
+
+Beyond-paper rationale (DESIGN.md §2)
+-------------------------------------
+The paper's dpXOR reads the whole DB *per query*: operational intensity is a
+fixed ~1 op/byte, pinned to the memory roofline (its Fig. 3b). With additive
+Z_256 shares, a batch of Q queries against the same DB shard is one matrix
+product ``shares[Q, R] × db[R, L]`` — the DB is read once per *batch*,
+multiplying intensity by Q and moving the scan toward the compute roofline.
+UPMEM DPUs have no matrix unit, so the paper cannot make this move; the TPU's
+MXU executes int8×int8→int32 natively.
+
+Correctness over Z_256: answers only matter mod 256 and 2^8 | 2^32, so int32
+accumulation (and any wraparound) preserves the residue; the client reduces
+mod 256 at reconstruction.
+
+Kernel: classic three-loop blocked matmul. Grid = (Q tiles, L tiles, R
+tiles); R is the innermost (sequential) accumulation dimension so each
+``[TQ, TL]`` output block stays resident in VMEM while ``[TQ, TR]`` share
+and ``[TR, TL]`` DB tiles stream through.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+I32 = jnp.int32
+
+
+def _matmul_kernel(s_ref, d_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        s_ref[...],
+        d_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=I32,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_q", "tile_r", "tile_l", "interpret")
+)
+def pir_matmul(
+    shares: jax.Array,
+    db_bytes: jax.Array,
+    *,
+    tile_q: int = 8,
+    tile_r: int = 1024,
+    tile_l: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """``shares[Q, R] i8 × db[R, L] i8 -> [Q, L] i32`` partial PIR answers.
+
+    Tile defaults target the MXU's 128-multiple alignment on the reduction
+    and lane dims; Q (query batch) may be small, so it rides the sublane dim.
+    """
+    q, r = shares.shape
+    r2, l = db_bytes.shape
+    if r != r2:
+        raise ValueError(f"reduction mismatch {shares.shape} x {db_bytes.shape}")
+    tile_q, tile_r, tile_l = min(tile_q, q), min(tile_r, r), min(tile_l, l)
+    for name, dim, t in (("Q", q, tile_q), ("R", r, tile_r), ("L", l, tile_l)):
+        if dim % t:
+            raise ValueError(f"{name}={dim} not divisible by tile {t}")
+    grid = (q // tile_q, l // tile_l, r // tile_r)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, tile_r), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tile_r, tile_l), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, tile_l), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q, l), I32),
+        interpret=interpret,
+    )(shares.astype(jnp.int8), db_bytes.astype(jnp.int8))

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (exact-match references).
+
+Each function computes the same contraction as its kernel with plain jnp
+ops — no tiling, no grids — and is the ground truth for the shape/dtype
+sweep tests. All three kernels are integer-exact, so tests assert equality,
+not approximate closeness.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.crypto.chacha import ggm_double
+
+U32 = jnp.uint32
+
+
+def dpxor_ref(db_words: jax.Array, bits: jax.Array) -> jax.Array:
+    """[R, W] u32 DB, [Q, R] u32 bits -> [Q, W] u32 select-XOR answers."""
+    mask = (U32(0) - bits.astype(U32))[:, :, None]        # [Q, R, 1]
+    masked = mask & db_words.astype(U32)[None, :, :]      # [Q, R, W]
+    return jax.lax.reduce(
+        masked, jnp.uint32(0), jax.lax.bitwise_xor, (1,)
+    )
+
+
+def ggm_expand_ref(seeds: jax.Array, t_bits: jax.Array, cw_seed: jax.Array,
+                   cw_t: jax.Array, *, rounds: int = 12):
+    """One corrected GGM level in leaf-major layout.
+
+    seeds [n, 4], t_bits [n] -> (children [2n, 4] interleaved L/R, t [2n]).
+    Mirrors core.dpf._expand_level (the construction used by gen_keys).
+    """
+    s_l, t_l, s_r, t_r = ggm_double(seeds, rounds=rounds)
+    mask = t_bits.astype(U32)[:, None] * cw_seed.astype(U32)[None, :]
+    s_l = s_l ^ mask
+    s_r = s_r ^ mask
+    t_l = t_l ^ (t_bits & cw_t[0])
+    t_r = t_r ^ (t_bits & cw_t[1])
+    n = seeds.shape[0]
+    children = jnp.stack([s_l, s_r], axis=1).reshape(2 * n, 4)
+    t_out = jnp.stack([t_l, t_r], axis=1).reshape(2 * n)
+    return children, t_out
+
+
+def pir_matmul_ref(shares: jax.Array, db_bytes: jax.Array) -> jax.Array:
+    """[Q, R] i8 × [R, L] i8 -> [Q, L] i32 (the additive-share contraction)."""
+    return jax.lax.dot_general(
+        shares.astype(jnp.int8),
+        db_bytes.astype(jnp.int8),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )

@@ -1,0 +1,302 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede any other import — JAX locks the device
+count at first initialization, and the production meshes need 512 host
+placeholder devices (256 single-pod + 512 multi-pod).
+
+For every cell this driver:
+  1. builds the production mesh (16×16 or 2×16×16),
+  2. builds the pjit'd step (train_step for train shapes; prefill / decode
+     serve steps for inference shapes),
+  3. ``.lower(**ShapeDtypeStructs).compile()`` — no arrays are allocated,
+  4. records ``memory_analysis()`` (fits-in-HBM proof), ``cost_analysis()``
+     (FLOPs/bytes) and the collective-bytes parse into a JSONL row.
+
+Resumable: cells already present in the output JSONL are skipped, so the
+grid can run incrementally (single-core CPU compiles are slow).
+
+Usage:
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.jsonl
+  python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+  python -m repro.launch.dryrun --pir pir-8g --mesh single
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.analysis import roofline as rl
+from repro.config import MeshConfig, OptimizerConfig, RunConfig
+from repro.configs import (ARCHS, PIR_CONFIGS, SHAPES, cell_is_skipped,
+                           get_arch, get_shape)
+from repro.launch.mesh import MULTI_POD, SINGLE_POD, make_production_mesh
+from repro.models import build_model
+from repro.runtime.steps import make_serve_step, make_train_step
+
+# per-arch run policy: optimizer + microbatches + FSDP (DESIGN.md §5)
+ARCH_POLICY = {
+    "granite-3-2b":     dict(opt="adamw", micro=4, fsdp=False),
+    "qwen3-4b":         dict(opt="adamw", micro=4, fsdp=False),
+    "starcoder2-3b":    dict(opt="adamw", micro=4, fsdp=False),
+    "stablelm-3b":      dict(opt="adamw", micro=4, fsdp=False),
+    "whisper-small":    dict(opt="adamw", micro=2, fsdp=False),
+    "xlstm-350m":       dict(opt="adamw", micro=4, fsdp=False),
+    "llava-next-34b":   dict(opt="adafactor", micro=8, fsdp=True),
+    "grok-1-314b":      dict(opt="adafactor", micro=8, fsdp=True),
+    "deepseek-v3-671b": dict(opt="adafactor", micro=8, fsdp=True),
+    "zamba2-7b":        dict(opt="adamw", micro=8, fsdp=False),
+}
+
+
+def make_run(arch: str, shape_name: str, multi_pod: bool,
+             *, micro_override: Optional[int] = None) -> RunConfig:
+    pol = ARCH_POLICY[arch]
+    shape = get_shape(shape_name)
+    mesh_cfg = MULTI_POD if multi_pod else SINGLE_POD
+    micro = micro_override or pol["micro"]
+    if shape.kind == "train":
+        batch_shards = mesh_cfg.n_devices // 16   # batch axes = all but model
+        while shape.global_batch // micro % batch_shards:
+            micro //= 2
+        micro = max(micro, 1)
+    else:
+        micro = 1
+    return RunConfig(
+        model=get_arch(arch), shape=shape, mesh=mesh_cfg,
+        optimizer=OptimizerConfig(name=pol["opt"]),
+        microbatches=micro, remat="block", fsdp=pol["fsdp"],
+    )
+
+
+def _struct(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               *, compile_only: bool = False,
+               micro_override: Optional[int] = None) -> dict:
+    """Lower + compile one cell; returns the JSONL record."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    run = make_run(arch, shape_name, multi_pod,
+                   micro_override=micro_override)
+    cfg, shape = run.model, run.shape
+    n_chips = run.mesh.n_devices
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            ts = make_train_step(run, mesh)
+            params_s = jax.eval_shape(ts.model.init_params,
+                                      jax.random.PRNGKey(0))
+            from repro.optim.optimizer import opt_init
+            opt_s = jax.eval_shape(partial(opt_init, run.optimizer),
+                                   params_s)
+            ef_s = None
+            lowered = ts.step.lower(params_s, opt_s, ef_s,
+                                    ts.input_structs)
+            n_tokens = shape.global_batch * shape.seq_len
+            training = True
+        else:
+            ss = make_serve_step(run, mesh)
+            params_s = jax.eval_shape(ss.model.init_params,
+                                      jax.random.PRNGKey(0))
+            if shape.kind == "prefill":
+                lowered = ss.prefill.lower(params_s, ss.input_structs)
+                n_tokens = shape.global_batch * shape.seq_len
+            else:   # decode
+                cache_s = jax.eval_shape(
+                    partial(ss.model.init_cache, shape.global_batch,
+                            shape.seq_len))
+                tok_s = jax.ShapeDtypeStruct((shape.global_batch, 1),
+                                             np.int32)
+                lowered = ss.decode.lower(params_s, cache_s, tok_s)
+                n_tokens = shape.global_batch
+            training = False
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        model_flops = rl.model_flops_for(
+            cfg.n_active_params(), n_tokens, training=training)
+        roof = rl.from_compiled(
+            f"{arch}/{shape_name}/{'multi' if multi_pod else 'single'}",
+            compiled, n_chips=n_chips, model_flops=model_flops)
+
+    rec = {
+        "kind": "lm", "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "n_chips": n_chips,
+        "ok": True,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "microbatches": run.microbatches, "fsdp": run.fsdp,
+        "optimizer": run.optimizer.name,
+        "memory": _mem_dict(mem),
+        **roof.to_dict(),
+    }
+    return rec
+
+
+def lower_pir_cell(pir_name: str, multi_pod: bool, *, path: str = "fused",
+                   n_queries: int = 32, collective: str = "gather",
+                   chunk_log: int = 12) -> dict:
+    """Lower + compile a PIR serve step on the production mesh."""
+    import dataclasses
+    from repro.core.server import PIRServer, build_serve_fn, key_specs
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = PIR_CONFIGS[pir_name]
+    if path == "matmul" and cfg.mode != "additive":
+        cfg = dataclasses.replace(cfg, mode="additive")
+    n_chips = 512 if multi_pod else 256
+    t0 = time.time()
+    with mesh:
+        fns = build_serve_fn(cfg, mesh, n_queries=n_queries, path=path,
+                             collective=collective, chunk_log=chunk_log)
+        keys = key_specs(cfg, n_queries)
+        db_s = jax.ShapeDtypeStruct((cfg.n_items, cfg.item_bytes // 4),
+                                    np.uint32)
+        lowered = jax.jit(fns.serve).lower(db_s, keys)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        # PIR "model flops": the useful work is one pass over the DB per
+        # query batch — count it as bytes-limited ops (1 XOR word-op per
+        # 4 bytes) for the ratio bookkeeping.
+        model_flops = cfg.db_bytes / 4 * n_queries
+        roof = rl.from_compiled(
+            f"{pir_name}/{path}/{'multi' if multi_pod else 'single'}",
+            compiled, n_chips=n_chips, model_flops=model_flops)
+    return {
+        "kind": "pir", "arch": pir_name, "shape": path,
+        "mesh": "multi" if multi_pod else "single",
+        "n_chips": n_chips, "ok": True,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "n_queries": n_queries, "collective": collective,
+        "chunk_log": chunk_log,
+        "memory": _mem_dict(mem),
+        **roof.to_dict(),
+    }
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _done_cells(path: str) -> set:
+    done = set()
+    if path and os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if r.get("ok"):
+                    done.add((r["kind"], r["arch"], r["shape"], r["mesh"]))
+    return done
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id")
+    ap.add_argument("--shape", default=None, help="shape cell name")
+    ap.add_argument("--pir", default=None, help="PIR config name")
+    ap.add_argument("--pir-path", default="fused",
+                    choices=["baseline", "fused", "matmul"])
+    ap.add_argument("--pir-collective", default="gather",
+                    choices=["gather", "butterfly"])
+    ap.add_argument("--pir-chunk-log", type=int, default=12)
+    ap.add_argument("--pir-queries", type=int, default=32)
+    ap.add_argument("--micro", type=int, default=None,
+                    help="override ARCH_POLICY microbatches")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="run the whole 40-cell grid + PIR cells")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    args = ap.parse_args(argv)
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = _done_cells(args.out)
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append(("lm", arch, shape))
+        cells.append(("pir", "pir-8g", args.pir_path))
+        cells.append(("pir", "pir-1g", args.pir_path))
+    else:
+        if args.arch:
+            shapes = [args.shape] if args.shape else list(SHAPES)
+            for s in shapes:
+                cells.append(("lm", args.arch, s))
+        if args.pir:
+            cells.append(("pir", args.pir, args.pir_path))
+
+    n_fail = 0
+    with open(args.out, "a") as out:
+        for kind, arch, shape in cells:
+            for multi in meshes:
+                mesh_name = "multi" if multi else "single"
+                key = (kind, arch, shape, mesh_name)
+                if key in done:
+                    print(f"[skip/done] {key}")
+                    continue
+                if kind == "lm" and cell_is_skipped(arch, shape):
+                    rec = {"kind": kind, "arch": arch, "shape": shape,
+                           "mesh": mesh_name, "ok": True, "skipped": True,
+                           "reason": "long_500k requires sub-quadratic "
+                                     "attention (DESIGN.md §4)"}
+                    out.write(json.dumps(rec) + "\n")
+                    out.flush()
+                    print(f"[skip/rule] {key}")
+                    continue
+                print(f"[lower] {key} ...", flush=True)
+                try:
+                    if kind == "lm":
+                        rec = lower_cell(arch, shape, multi,
+                                         micro_override=args.micro)
+                    else:
+                        rec = lower_pir_cell(
+                            arch, multi, path=shape,
+                            collective=args.pir_collective,
+                            chunk_log=args.pir_chunk_log,
+                            n_queries=args.pir_queries)
+                    print(f"[ok] {key}: compile {rec['compile_s']}s "
+                          f"bottleneck={rec.get('bottleneck')}", flush=True)
+                except Exception as e:   # record failures, keep going
+                    rec = {"kind": kind, "arch": arch, "shape": shape,
+                           "mesh": mesh_name, "ok": False,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    n_fail += 1
+                    print(f"[FAIL] {key}: {e}", flush=True)
+                out.write(json.dumps(rec) + "\n")
+                out.flush()
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

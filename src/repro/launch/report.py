@@ -1,0 +1,138 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from results/dryrun.jsonl.
+
+Takes the LAST record per (kind, arch, shape, mesh) so re-runs supersede
+earlier failures. ``--markdown`` emits the tables; default prints a summary.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+
+def load(path: str) -> List[dict]:
+    last: Dict[tuple, dict] = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            last[(r.get("kind"), r.get("arch"), r.get("shape"),
+                  r.get("mesh"))] = r
+    return list(last.values())
+
+
+def _fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.0f}µs"
+
+
+def _fmt_b(x) -> str:
+    if x is None:
+        return "-"
+    for unit, div in (("GB", 1 << 30), ("MB", 1 << 20), ("KB", 1 << 10)):
+        if x >= div:
+            return f"{x/div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def roofline_table(rows: List[dict], mesh: str = "single") -> str:
+    out = ["| cell | chips | HLO FLOPs | t_comp | t_mem | t_coll | "
+           "bottleneck | useful/HLO | MFU-bound | HBM/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("mesh") != mesh or not r.get("ok"):
+            continue
+        if r.get("skipped"):
+            out.append(f"| {r['arch']}/{r['shape']} | - | - | - | - | - | "
+                       f"skipped | - | - | - |")
+            continue
+        mem = r.get("memory", {})
+        hbm = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0))
+        out.append(
+            f"| {r['arch']}/{r['shape']} | {r['n_chips']} "
+            f"| {r['hlo_flops']:.2e} "
+            f"| {_fmt_s(r['t_compute_s'])} | {_fmt_s(r['t_memory_s'])} "
+            f"| {_fmt_s(r['t_collective_s'])} | {r['bottleneck']} "
+            f"| {r['useful_flop_ratio']:.2f} | {r['mfu_bound']*100:.2f}% "
+            f"| {_fmt_b(hbm)} |")
+    return "\n".join(out)
+
+
+def dryrun_table(rows: List[dict]) -> str:
+    out = ["| cell | mesh | status | compile | bytes/dev (arg+tmp) | "
+           "collectives |",
+           "|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r.get("kind", ""), r["arch"],
+                                         r["shape"], r["mesh"])):
+        if r.get("skipped"):
+            out.append(f"| {r['arch']}/{r['shape']} | {r['mesh']} | "
+                       f"SKIP ({r.get('reason', '')[:40]}…) | - | - | - |")
+            continue
+        if not r.get("ok"):
+            out.append(f"| {r['arch']}/{r['shape']} | {r['mesh']} | "
+                       f"FAIL | - | - | {r.get('error', '')[:60]} |")
+            continue
+        mem = r.get("memory", {})
+        hbm = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0))
+        coll = r.get("collective_breakdown", {})
+        coll_s = ", ".join(f"{k.split('-')[-1][:4]}:{_fmt_b(v)}"
+                           for k, v in sorted(coll.items(),
+                                              key=lambda kv: -kv[1])[:3])
+        out.append(f"| {r['arch']}/{r['shape']} | {r['mesh']} | ok | "
+                   f"{r.get('compile_s', '-')}s | {_fmt_b(hbm)} | "
+                   f"{coll_s} |")
+    return "\n".join(out)
+
+
+def summary(rows: List[dict]) -> str:
+    ok = sum(1 for r in rows if r.get("ok") and not r.get("skipped"))
+    skip = sum(1 for r in rows if r.get("skipped"))
+    fail = sum(1 for r in rows if not r.get("ok"))
+    over = [r for r in rows if r.get("ok") and not r.get("skipped")
+            and r.get("memory", {}).get("temp_size_in_bytes", 0)
+            + r.get("memory", {}).get("argument_size_in_bytes", 0)
+            > 16 * (1 << 30)]
+    lines = [f"cells ok={ok} skipped={skip} failed={fail}"]
+    for r in over:
+        mem = r["memory"]
+        tot = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)) / (1 << 30)
+        lines.append(f"  HBM>16G: {r['arch']}/{r['shape']}/{r['mesh']} "
+                     f"= {tot:.1f} GiB/dev (CPU-f32 accounting)")
+    for r in rows:
+        if not r.get("ok"):
+            lines.append(f"  FAIL {r['arch']}/{r['shape']}/{r['mesh']}: "
+                         f"{r.get('error', '')[:120]}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun.jsonl")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args(argv)
+    rows = load(args.inp)
+    if args.markdown:
+        print("### Dry-run grid\n")
+        print(dryrun_table(rows))
+        print("\n### Roofline (single-pod, 256 chips)\n")
+        print(roofline_table(rows, "single"))
+        print("\n### Roofline (multi-pod, 512 chips)\n")
+        print(roofline_table(rows, "multi"))
+    else:
+        print(summary(rows))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,330 @@
+"""Whisper-style encoder–decoder transformer (audio family).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings ``[B, encoder_len, d_model]``; the
+encoder adds sinusoidal positions and runs non-causal self-attention.
+The decoder uses learned positions (table sized for the 32k decode cell —
+Whisper's native 448 ceiling is an operating-envelope choice, not a model
+constraint), causal self-attention, and per-layer cross-attention whose K/V
+are computed once from the encoder output and cached.
+
+Faithfulness notes (DESIGN.md §4): GELU two-matrix MLPs and pre-LayerNorm
+as in Whisper; attention biases are dropped (simplification), MHA is the
+kv==heads degenerate case of the shared GQA path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+
+F32 = jnp.float32
+
+
+class EncDecCache(NamedTuple):
+    self_k: jax.Array       # [L, B, C, KV, hd]
+    self_v: jax.Array
+    cross_k: jax.Array      # [L, B, enc_len, KV, hd]
+    cross_v: jax.Array
+    length: jax.Array
+
+
+def sinusoid_positions(n: int, d: int) -> np.ndarray:
+    pos = np.arange(n)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * dim / d)
+    return np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+
+
+def _ln_init(d, dt):
+    return {"scale": jnp.ones((d,), dt), "bias": jnp.zeros((d,), dt)}
+
+
+def _gelu_mlp_init(rng, d, d_ff, dt):
+    k1, k2 = jax.random.split(rng)
+    return {"fc1": L.dense_init(k1, d, d_ff, dt),
+            "fc2": L.dense_init(k2, d_ff, d, dt)}
+
+
+def _gelu_mlp(p, x):
+    return jax.nn.gelu(x @ p["fc1"]) @ p["fc2"]
+
+
+def _xattn_init(rng, cfg, dt):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+    ks = jax.random.split(rng, 4)
+    return {"wq": L.dense_init(ks[0], d, h * hd, dt),
+            "wk": L.dense_init(ks[1], d, h * hd, dt),
+            "wv": L.dense_init(ks[2], d, h * hd, dt),
+            "wo": L.dense_init(ks[3], h * hd, d, dt)}
+
+
+_LN_SPEC = {"scale": P(None), "bias": P(None)}
+_MLP_SPEC = {"fc1": P(None, L.MODEL), "fc2": P(L.MODEL, None)}
+_XATTN_SPEC = {"wq": P(None, L.MODEL), "wk": P(None, L.MODEL),
+               "wv": P(None, L.MODEL), "wo": P(L.MODEL, None)}
+
+
+class EncDecLM:
+    """Whisper-small shaped encoder-decoder with the standard protocol."""
+
+    MAX_DEC_POS = 32768
+
+    def __init__(self, cfg: ModelConfig, *, remat: str = "block"):
+        self.cfg = cfg
+        self.remat = remat
+
+    # -- params -------------------------------------------------------------
+
+    def _enc_layer_init(self, rng):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(rng, 2)
+        return {"ln1": _ln_init(cfg.d_model, dt),
+                "attn": L.gqa_init(ks[0], cfg),
+                "ln2": _ln_init(cfg.d_model, dt),
+                "mlp": _gelu_mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt)}
+
+    def _dec_layer_init(self, rng):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(rng, 3)
+        return {"ln1": _ln_init(cfg.d_model, dt),
+                "self_attn": L.gqa_init(ks[0], cfg),
+                "ln2": _ln_init(cfg.d_model, dt),
+                "cross_attn": _xattn_init(ks[1], cfg, dt),
+                "ln3": _ln_init(cfg.d_model, dt),
+                "mlp": _gelu_mlp_init(ks[2], cfg.d_model, cfg.d_ff, dt)}
+
+    def init_params(self, rng) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(rng, 5)
+        enc_keys = jax.random.split(ks[0], cfg.n_encoder_layers)
+        dec_keys = jax.random.split(ks[1], cfg.n_layers)
+        return {
+            "embed": L.embed_init(ks[2], cfg.vocab, cfg.d_model, cfg.dtype),
+            "pos_dec": (jax.random.normal(
+                ks[3], (self.MAX_DEC_POS, cfg.d_model), F32) * 0.01
+            ).astype(dt),
+            "enc_layers": jax.vmap(self._enc_layer_init)(enc_keys),
+            "dec_layers": jax.vmap(self._dec_layer_init)(dec_keys),
+            "enc_norm": _ln_init(cfg.d_model, dt),
+            "dec_norm": _ln_init(cfg.d_model, dt),
+        }
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        enc_spec = {"ln1": _LN_SPEC, "attn": L.gqa_specs(cfg),
+                    "ln2": _LN_SPEC, "mlp": _MLP_SPEC}
+        dec_spec = {"ln1": _LN_SPEC, "self_attn": L.gqa_specs(cfg),
+                    "ln2": _LN_SPEC, "cross_attn": _XATTN_SPEC,
+                    "ln3": _LN_SPEC, "mlp": _MLP_SPEC}
+        stack = lambda t: jax.tree_util.tree_map(
+            lambda s: P(None, *s), t, is_leaf=lambda x: isinstance(x, P))
+        return {
+            "embed": L.embed_specs(),
+            "pos_dec": P(None, None),
+            "enc_layers": stack(enc_spec),
+            "dec_layers": stack(dec_spec),
+            "enc_norm": _LN_SPEC,
+            "dec_norm": _LN_SPEC,
+        }
+
+    # -- encoder ------------------------------------------------------------
+
+    def encode(self, params, frame_embeds):
+        """frame_embeds [B, T_enc, d] -> encoder states [B, T_enc, d]."""
+        cfg = self.cfg
+        t_enc = frame_embeds.shape[1]
+        pos = jnp.asarray(sinusoid_positions(t_enc, cfg.d_model),
+                          frame_embeds.dtype)
+        x = frame_embeds + pos[None]
+        chunk = _divisor_chunk(t_enc)
+
+        def body(x, lp):
+            h = L.layernorm(x, lp["ln1"]["scale"], lp["ln1"]["bias"],
+                            cfg.norm_eps)
+            q, k, v = L.gqa_qkv(lp["attn"], cfg, h,
+                                jnp.arange(t_enc)[None, :])
+            a = L.chunked_attention(q, k, v, causal=False,
+                                    q_chunk=chunk, kv_chunk=chunk)
+            b, s, hh, hd = a.shape
+            x = x + a.reshape(b, s, hh * hd) @ lp["attn"]["wo"]
+            h = L.layernorm(x, lp["ln2"]["scale"], lp["ln2"]["bias"],
+                            cfg.norm_eps)
+            return x + _gelu_mlp(lp["mlp"], h), ()
+
+        if self.remat == "block":
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return L.layernorm(x, params["enc_norm"]["scale"],
+                           params["enc_norm"]["bias"], cfg.norm_eps)
+
+    # -- decoder ------------------------------------------------------------
+
+    def _cross_kv(self, lp, enc_states):
+        cfg = self.cfg
+        b, t, _ = enc_states.shape
+        h, hd = cfg.n_heads, cfg.resolved_head_dim
+        k = (enc_states @ lp["cross_attn"]["wk"]).reshape(b, t, h, hd)
+        v = (enc_states @ lp["cross_attn"]["wv"]).reshape(b, t, h, hd)
+        return k, v
+
+    def _dec_layer(self, lp, x, positions, enc_states=None, cross_kv=None,
+                   self_cache=None, kv_len=None):
+        cfg = self.cfg
+        b, s, _ = x.shape
+        h_n, hd = cfg.n_heads, cfg.resolved_head_dim
+        # causal self-attention
+        h = L.layernorm(x, lp["ln1"]["scale"], lp["ln1"]["bias"],
+                        cfg.norm_eps)
+        q, k, v = L.gqa_qkv(lp["self_attn"], cfg, h, positions)
+        if self_cache is not None:
+            a = L.decode_attention_append(q, self_cache[0], self_cache[1],
+                                          k, v, kv_len)
+        else:
+            a = L.chunked_attention(q, k, v, causal=True,
+                                    q_chunk=min(cfg.attn_chunk, s),
+                                    kv_chunk=min(cfg.attn_chunk, s))
+        x = x + a.reshape(b, s, h_n * hd) @ lp["self_attn"]["wo"]
+        # cross-attention
+        h = L.layernorm(x, lp["ln2"]["scale"], lp["ln2"]["bias"],
+                        cfg.norm_eps)
+        qx = (h @ lp["cross_attn"]["wq"]).reshape(b, s, h_n, hd)
+        kx, vx = (cross_kv if cross_kv is not None
+                  else self._cross_kv(lp, enc_states))
+        t_enc = kx.shape[1]
+        if s == 1:
+            a = L.decode_attention(qx, kx, vx, jnp.asarray(t_enc))
+        else:
+            a = L.chunked_attention(qx, kx, vx, causal=False,
+                                    q_chunk=min(cfg.attn_chunk, s),
+                                    kv_chunk=_divisor_chunk(t_enc))
+        x = x + a.reshape(b, s, h_n * hd) @ lp["cross_attn"]["wo"]
+        h = L.layernorm(x, lp["ln3"]["scale"], lp["ln3"]["bias"],
+                        cfg.norm_eps)
+        return x + _gelu_mlp(lp["mlp"], h), (k, v)
+
+    def _dec_embed(self, params, tokens, start):
+        x = L.embed_lookup(params["embed"], tokens)
+        pos = jax.lax.dynamic_slice_in_dim(params["pos_dec"], start,
+                                           tokens.shape[1], 0)
+        return x + pos[None].astype(x.dtype)
+
+    # -- public -------------------------------------------------------------
+
+    def loss(self, params, tokens, *, frame_embeds=None, **_):
+        logits, _ = self.forward(params, tokens, frame_embeds=frame_embeds)
+        return _xent(logits[:, :-1], tokens[:, 1:]), {}
+
+    def forward(self, params, tokens, *, frame_embeds=None, prefix_embeds=None):
+        """Teacher-forced decode over the full token stream."""
+        if frame_embeds is None:
+            frame_embeds = prefix_embeds
+        cfg = self.cfg
+        enc = self.encode(params, frame_embeds)
+        x = self._dec_embed(params, tokens, 0)
+        positions = jnp.arange(tokens.shape[1])[None, :]
+
+        def body(x, lp):
+            x, _ = self._dec_layer(lp, x, positions, enc_states=enc)
+            return x, ()
+
+        if self.remat == "block":
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        x = L.layernorm(x, params["dec_norm"]["scale"],
+                        params["dec_norm"]["bias"], cfg.norm_eps)
+        return L.unembed(x, params["embed"], self.cfg.vocab), jnp.zeros((), F32)
+
+    def prefill(self, params, tokens, *, frame_embeds=None, prefix_embeds=None):
+        if frame_embeds is None:
+            frame_embeds = prefix_embeds
+        cfg = self.cfg
+        enc = self.encode(params, frame_embeds)
+        x = self._dec_embed(params, tokens, 0)
+        positions = jnp.arange(tokens.shape[1])[None, :]
+
+        def body(x, lp):
+            x, kv = self._dec_layer(lp, x, positions, enc_states=enc)
+            ck, cv = self._cross_kv(lp, enc)
+            return x, (kv[0], kv[1], ck, cv)
+
+        if self.remat == "block":
+            body = jax.checkpoint(body)
+        x, (sk, sv, ck, cv) = jax.lax.scan(body, x, params["dec_layers"])
+        x = L.layernorm(x[:, -1:], params["dec_norm"]["scale"],
+                        params["dec_norm"]["bias"], cfg.norm_eps)
+        logits = L.unembed(x, params["embed"], self.cfg.vocab)[:, 0]
+        cache = EncDecCache(self_k=sk, self_v=sv, cross_k=ck, cross_v=cv,
+                            length=jnp.asarray(tokens.shape[1], jnp.int32))
+        return logits, cache
+
+    def decode(self, params, cache: EncDecCache, tokens, *, write=True):
+        cfg = self.cfg
+        x = self._dec_embed(params, tokens, cache.length)
+        positions = jnp.reshape(cache.length, (1, 1))
+        kv_len = cache.length
+
+        def body(x, xs):
+            lp, sk, sv, ck, cv = xs
+            x, kv = self._dec_layer(lp, x, positions, cross_kv=(ck, cv),
+                                    self_cache=(sk, sv), kv_len=kv_len)
+            return x, kv
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["dec_layers"], cache.self_k, cache.self_v,
+                      cache.cross_k, cache.cross_v))
+        x = L.layernorm(x, params["dec_norm"]["scale"],
+                        params["dec_norm"]["bias"], cfg.norm_eps)
+        logits = L.unembed(x, params["embed"], self.cfg.vocab)[:, 0]
+        if write:
+            pos = cache.length
+            sk = jax.lax.dynamic_update_slice(
+                cache.self_k, nk.astype(cache.self_k.dtype), (0, 0, pos, 0, 0))
+            sv = jax.lax.dynamic_update_slice(
+                cache.self_v, nv.astype(cache.self_v.dtype), (0, 0, pos, 0, 0))
+            cache = cache._replace(self_k=sk, self_v=sv, length=pos + 1)
+        else:
+            cache = cache._replace(length=cache.length + 1)
+        return logits, cache
+
+    def init_cache(self, batch: int, capacity: int) -> EncDecCache:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        hd = cfg.resolved_head_dim
+        sshape = (cfg.n_layers, batch, capacity, cfg.n_kv_heads, hd)
+        cshape = (cfg.n_layers, batch, cfg.encoder_len, cfg.n_heads, hd)
+        return EncDecCache(
+            self_k=jnp.zeros(sshape, dt), self_v=jnp.zeros(sshape, dt),
+            cross_k=jnp.zeros(cshape, dt), cross_v=jnp.zeros(cshape, dt),
+            length=jnp.asarray(0, jnp.int32))
+
+    def cache_specs(self) -> EncDecCache:
+        s = P(None, L.BATCH, None, L.MODEL, None)
+        return EncDecCache(self_k=s, self_v=s, cross_k=s, cross_v=s,
+                           length=P())
+
+
+def _divisor_chunk(n: int, target: int = 768) -> int:
+    """Largest divisor of n that is <= target (attention chunk for enc len)."""
+    best = 1
+    for c in range(1, min(n, target) + 1):
+        if n % c == 0:
+            best = c
+    return best
+
+
+def _xent(logits, targets):
+    lse = jax.nn.logsumexp(logits.astype(F32), axis=-1)
+    picked = jnp.take_along_axis(
+        logits.astype(F32), targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)

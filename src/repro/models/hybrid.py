@@ -1,0 +1,226 @@
+"""Zamba2-style hybrid: a deep Mamba2 trunk with one weight-*shared*
+attention block invoked every ``shared_attn_every`` layers.
+
+zamba2-7b: 81 Mamba2 blocks (d_state 64) + a shared GQA-attention/MLP block
+(d_ff 14336) re-applied after every 6th Mamba block — 13 invocations with
+the *same* weights (Zamba2's weight-tied global mixer). The Mamba trunk is
+grouped into scans of 6 so HLO holds one Mamba body + 13 shared-block calls.
+
+Decode carries 81 O(1) Mamba states plus 13 KV caches (one per shared-block
+invocation depth — weights are tied, activations are not). The KV read per
+decode step is bounded (13 × seq reads vs 81 for a full transformer), which
+is the hybrid's ``long_500k`` story.
+"""
+from __future__ import annotations
+
+from typing import Any, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+
+F32 = jnp.float32
+
+
+class HybridCache(NamedTuple):
+    conv: jax.Array          # [81, B, K-1, d_conv_ch]
+    state: jax.Array         # [81, B, H, P, N]
+    attn_k: jax.Array        # [n_shared, B, C, KV, hd]
+    attn_v: jax.Array
+    length: jax.Array
+
+
+class Zamba2Model:
+    def __init__(self, cfg: ModelConfig, *, remat: str = "block"):
+        self.cfg = cfg
+        self.remat = remat
+        self.every = cfg.ssm.shared_attn_every or 6
+        self.n_groups = cfg.n_layers // self.every
+        self.tail = cfg.n_layers - self.n_groups * self.every
+
+    def init_params(self, rng) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(rng, 6)
+        layer_keys = jax.random.split(ks[0], cfg.n_layers)
+        mamba = jax.vmap(lambda r: {
+            "norm": jnp.zeros((cfg.d_model,), jnp.dtype(cfg.dtype)),
+            "mix": S.mamba2_init(r, cfg),
+        })(layer_keys)
+        dt = jnp.dtype(cfg.dtype)
+        shared = {
+            "ln1": jnp.zeros((cfg.d_model,), dt),
+            "attn": L.gqa_init(ks[1], cfg),
+            "ln2": jnp.zeros((cfg.d_model,), dt),
+            "mlp": L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.dtype),
+        }
+        return {
+            "embed": L.embed_init(ks[3], cfg.vocab, cfg.d_model, cfg.dtype),
+            "mamba_layers": mamba,
+            "shared": shared,
+            "final_norm": jnp.zeros((cfg.d_model,), dt),
+            "unembed": L.embed_init(ks[4], cfg.vocab, cfg.d_model, cfg.dtype),
+        }
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        mamba_spec = {"norm": P(None), "mix": S.mamba2_specs(cfg)}
+        stack = jax.tree_util.tree_map(
+            lambda s: P(None, *s), mamba_spec,
+            is_leaf=lambda x: isinstance(x, P))
+        return {
+            "embed": L.embed_specs(),
+            "mamba_layers": stack,
+            "shared": {"ln1": P(None), "attn": L.gqa_specs(cfg),
+                       "ln2": P(None), "mlp": L.mlp_specs()},
+            "final_norm": P(None),
+            "unembed": L.embed_specs(),
+        }
+
+    # -- pieces --------------------------------------------------------------
+
+    def _slice(self, tree, lo, hi):
+        return jax.tree_util.tree_map(lambda a: a[lo:hi], tree)
+
+    def _mamba_group(self, group_params, x, caches=None, want_cache=False):
+        """Scan a group of Mamba layers. caches: (conv [g,...], state [g,...])"""
+        def body(x, xs):
+            if caches is None:
+                lp = xs
+                h = L.rmsnorm(x, lp["norm"], self.cfg.norm_eps)
+                y, c = S.mamba2_apply(lp["mix"], self.cfg, h)
+            else:
+                lp, conv, st = xs
+                h = L.rmsnorm(x, lp["norm"], self.cfg.norm_eps)
+                y, c = S.mamba2_apply(lp["mix"], self.cfg, h,
+                                      cache=(conv, st))
+            # don't materialize per-layer states the caller will discard
+            if caches is None and not want_cache:
+                c = ()
+            return x + y, c
+
+        if self.remat == "block":
+            body = jax.checkpoint(body)
+        xs = group_params if caches is None else (group_params,) + caches
+        x, cs = jax.lax.scan(body, x, xs)
+        return x, cs
+
+    def _shared_block(self, params, x, positions, kv_cache=None, kv_len=None):
+        sp = params["shared"]
+        h = L.rmsnorm(x, sp["ln1"], self.cfg.norm_eps)
+        a, kv = L.gqa_attend(sp["attn"], self.cfg, h, positions,
+                             kv_cache=kv_cache, kv_len=kv_len)
+        x = x + a
+        h = L.rmsnorm(x, sp["ln2"], self.cfg.norm_eps)
+        return x + L.mlp_apply(sp["mlp"], h), kv
+
+    # -- public --------------------------------------------------------------
+
+    def _run(self, params, tokens, *, collect_cache=False, cache=None):
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"], tokens)
+        s = tokens.shape[1]
+        decode = cache is not None and s == 1
+        positions = (jnp.reshape(cache.length, (1, 1)) if decode
+                     else jnp.arange(s)[None, :])
+        kv_len = cache.length if decode else None
+
+        convs, states, aks, avs = [], [], [], []
+        g = self.every
+        for gi in range(self.n_groups + (1 if self.tail else 0)):
+            lo = gi * g
+            hi = min(lo + g, cfg.n_layers)
+            gp = self._slice(params["mamba_layers"], lo, hi)
+            gc = (None if cache is None else
+                  (cache.conv[lo:hi], cache.state[lo:hi]))
+            x, cs = self._mamba_group(gp, x, caches=gc,
+                                      want_cache=collect_cache)
+            if collect_cache or decode:
+                convs.append(cs[0])
+                states.append(cs[1])
+            if hi - lo == g and gi < self.n_groups:     # shared block
+                if decode:
+                    kvc = (cache.attn_k[gi], cache.attn_v[gi])
+                    x, kv = self._shared_block(params, x, positions,
+                                               kv_cache=kvc, kv_len=kv_len)
+                else:
+                    x, kv = self._shared_block(params, x, positions)
+                if collect_cache or decode:
+                    aks.append(kv[0])
+                    avs.append(kv[1])
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        extra = (convs, states, aks, avs)
+        return x, extra
+
+    def forward(self, params, tokens, **_):
+        x, _ = self._run(params, tokens)
+        return L.unembed(x, params["unembed"], self.cfg.vocab), jnp.zeros((), F32)
+
+    def loss(self, params, tokens, **_):
+        logits, _ = self.forward(params, tokens)
+        return _xent(logits[:, :-1], tokens[:, 1:]), {}
+
+    def prefill(self, params, tokens, **_):
+        x, (convs, states, aks, avs) = self._run(params, tokens,
+                                                 collect_cache=True)
+        logits = L.unembed(x[:, -1:], params["unembed"], self.cfg.vocab)[:, 0]
+        cache = HybridCache(
+            conv=jnp.concatenate(convs, axis=0),
+            state=jnp.concatenate(states, axis=0),
+            attn_k=jnp.stack(aks), attn_v=jnp.stack(avs),
+            length=jnp.asarray(tokens.shape[1], jnp.int32))
+        return logits, cache
+
+    def decode(self, params, cache: HybridCache, tokens, *, write=True):
+        x, (convs, states, aks, avs) = self._run(params, tokens, cache=cache)
+        logits = L.unembed(x, params["unembed"], self.cfg.vocab)[:, 0]
+        conv = jnp.concatenate(convs, axis=0)
+        state = jnp.concatenate(states, axis=0)
+        if write:
+            pos = cache.length
+            ak = jax.lax.dynamic_update_slice(
+                cache.attn_k, jnp.stack(aks).astype(cache.attn_k.dtype),
+                (0, 0, pos, 0, 0))
+            av = jax.lax.dynamic_update_slice(
+                cache.attn_v, jnp.stack(avs).astype(cache.attn_v.dtype),
+                (0, 0, pos, 0, 0))
+        else:
+            ak, av = cache.attn_k, cache.attn_v
+        return logits, HybridCache(conv=conv, state=state, attn_k=ak,
+                                   attn_v=av, length=cache.length + 1)
+
+    def init_cache(self, batch: int, capacity: int) -> HybridCache:
+        cfg = self.cfg
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        n_heads = d_inner // s.headdim
+        dt = jnp.dtype(cfg.dtype)
+        hd = cfg.resolved_head_dim
+        return HybridCache(
+            conv=jnp.zeros((cfg.n_layers, batch, s.d_conv - 1,
+                            d_inner + 2 * s.d_state), dt),
+            state=jnp.zeros((cfg.n_layers, batch, n_heads, s.headdim,
+                             s.d_state), F32),
+            attn_k=jnp.zeros((self.n_groups, batch, capacity,
+                              cfg.n_kv_heads, hd), dt),
+            attn_v=jnp.zeros((self.n_groups, batch, capacity,
+                              cfg.n_kv_heads, hd), dt),
+            length=jnp.asarray(0, jnp.int32))
+
+    def cache_specs(self) -> HybridCache:
+        return HybridCache(
+            conv=P(None, L.BATCH, None, L.MODEL),
+            state=P(None, L.BATCH, None, None, None),
+            attn_k=P(None, L.BATCH, None, L.MODEL, None),
+            attn_v=P(None, L.BATCH, None, L.MODEL, None),
+            length=P())
+
+
+def _xent(logits, targets):
+    lse = jax.nn.logsumexp(logits.astype(F32), axis=-1)
+    picked = jnp.take_along_axis(
+        logits.astype(F32), targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)

@@ -1,0 +1,504 @@
+"""Shared model primitives: norms, RoPE, chunked attention, MLP, embeddings.
+
+Conventions
+-----------
+* Parameters are plain nested dicts of jnp arrays; every init function has a
+  matching ``*_specs`` producing a PartitionSpec pytree of the same shape
+  (logical sharding: feature dims on ``model``, batch on ``data``/``pod``).
+* Activations flow in the config dtype (bf16 default); softmax/norm statistics
+  are computed in fp32.
+* Attention is flash-style: an online-softmax scan over KV chunks (and over Q
+  chunks for long sequences) so the score matrix never materializes beyond
+  ``[B, H, q_chunk, kv_chunk]`` — required for the 32k prefill cells.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# Mesh-axis aliases used by every spec function.
+BATCH = ("pod", "data")   # batch-sharded activations
+MODEL = "model"           # tensor-parallel features
+
+F32 = jnp.float32
+
+NEG_INF = -1e30
+
+
+def _ambient_mesh():
+    """The mesh installed by ``with mesh:`` (None outside any context)."""
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def shard_hint(x: jax.Array, *entries) -> jax.Array:
+    """Activation sharding constraint, ambient-mesh aware.
+
+    GSPMD occasionally gives up around data-dependent ops (sorts, gathers)
+    and replicates large intermediates; a constraint at the right boundary
+    restores the intended layout. ``entries`` follow PartitionSpec
+    semantics but are filtered against the axes the *current* mesh actually
+    has, and any entry whose axis sizes don't divide the dim is dropped —
+    so model code can state intent unconditionally and stay runnable on
+    the single-CPU test mesh.
+    """
+    m = _ambient_mesh()
+    if m is None:
+        return x
+    names = dict(m.shape)
+    fixed = []
+    for i, e in enumerate(entries[:x.ndim]):
+        if isinstance(e, tuple):
+            e = tuple(a for a in e if a in names)
+            e = e if e else None
+        elif e is not None and e not in names:
+            e = None
+        if e is not None:
+            size = 1
+            for a in (e if isinstance(e, tuple) else (e,)):
+                size *= names[a]
+            if size > 1 and x.shape[i] % size != 0:
+                e = None
+        fixed.append(e)
+    if all(e is None for e in fixed):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+def dense_init(rng, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.uniform(rng, (d_in, d_out), F32, -scale, scale)
+            ).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(F32))).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(F32) + bias.astype(F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), F32)          # [hd/2]
+    angles = positions.astype(F32)[..., None] * freqs         # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                       # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _online_softmax_block(q, k, v, mask, m_prev, l_prev, acc_prev):
+    """One flash-attention block update. q:[B,H,Tq,hd] k,v:[B,H,Tk,hd]."""
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=F32)
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc_prev * alpha[..., None] + jnp.einsum(
+        "bhqk,bhkd->bhqd", p.astype(v.dtype), v, preferred_element_type=F32)
+    return m_new, l_new, acc_new
+
+
+def chunked_attention(
+    q: jax.Array,            # [B, Sq, H, hd]
+    k: jax.Array,            # [B, Skv, KV, hd]
+    v: jax.Array,            # [B, Skv, KV, hd]
+    *,
+    causal: bool,
+    q_offset: int | jax.Array = 0,
+    kv_len: Optional[jax.Array] = None,   # valid KV prefix length (decode)
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """GQA flash-style attention; returns [B, Sq, H, hd].
+
+    KV heads are broadcast to Q heads by grouping. ``q_offset`` is the global
+    position of q[0] (prefill continuation / decode); ``kv_len`` masks the
+    unwritten tail of a preallocated KV cache.
+    """
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]          # value head dim may differ (MLA)
+    groups = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    # [B, S, KV, hd] -> [B, KV*G, S, hd] with q heads grouped per KV head.
+    qh = (q.transpose(0, 2, 1, 3) * scale).astype(q.dtype)     # [B,H,Sq,hd]
+    kh = jnp.repeat(k.transpose(0, 2, 1, 3), groups, axis=1)   # [B,H,Skv,hd]
+    vh = jnp.repeat(v.transpose(0, 2, 1, 3), groups, axis=1)
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    # odd lengths (e.g. MTP's S-1 stream) fall back to a single chunk
+    if sq % q_chunk:
+        q_chunk = sq
+    if skv % kv_chunk:
+        kv_chunk = skv
+    nq, nk = sq // q_chunk, skv // kv_chunk
+
+    q_blocks = qh.reshape(b, h, nq, q_chunk, hd).transpose(2, 0, 1, 3, 4)
+    k_blocks = kh.reshape(b, h, nk, kv_chunk, hd).transpose(2, 0, 1, 3, 4)
+    v_blocks = vh.reshape(b, h, nk, kv_chunk, hdv).transpose(2, 0, 1, 3, 4)
+
+    q_pos_base = jnp.asarray(q_offset, jnp.int32)
+
+    def q_block_body(_, qi):
+        qb = q_blocks[qi]
+        q_pos = q_pos_base + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_body(carry, ki):
+            m, l, acc = carry
+            kb, vb = k_blocks[ki], v_blocks[ki]
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if kv_len is not None:
+                mask &= k_pos[None, :] < kv_len
+            m, l, acc = _online_softmax_block(
+                qb, kb, vb, mask[None, None], m, l, acc)
+            return (m, l, acc), ()
+
+        init = (
+            jnp.full((b, h, q_chunk), NEG_INF, F32),
+            jnp.zeros((b, h, q_chunk), F32),
+            jnp.zeros((b, h, q_chunk, hdv), F32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_body, init, jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return (), out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block_body, (), jnp.arange(nq))
+    # outs: [nq, B, H, q_chunk, hdv] -> [B, Sq, H, hdv]
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, hdv)
+    return out
+
+
+def decode_attention_append(
+    q: jax.Array,            # [B, 1, H, hd]
+    k_cache: jax.Array,      # [B, S, KV, hd]
+    v_cache: jax.Array,
+    k_new: jax.Array,        # [B, 1, KV, hd] — current token's key
+    v_new: jax.Array,
+    kv_len: jax.Array,       # [] — valid cache prefix length
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Decode attention over (cache ∪ current token) without copying the
+    cache: the self term is concatenated on the (tiny) score axis only."""
+    b, _, h, hd = q.shape
+    kv = k_cache.shape[2]
+    groups = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = (q[:, 0].astype(F32) * scale).reshape(b, kv, groups, hd)
+    s_cache = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(F32))
+    pos = jnp.arange(k_cache.shape[1])
+    mask = pos[None, :] < jnp.reshape(kv_len, (-1, 1))
+    s_cache = jnp.where(mask[:, None, None, :], s_cache, NEG_INF)
+    s_self = jnp.einsum("bkgd,bkd->bkg", qg, k_new[:, 0].astype(F32))
+    s_all = jnp.concatenate([s_cache, s_self[..., None]], axis=-1)
+    p = jax.nn.softmax(s_all, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p[..., :-1], v_cache.astype(F32))
+    out += p[..., -1][..., None] * v_new[:, 0].astype(F32)[:, :, None, :]
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,            # [B, 1, H, hd]
+    k_cache: jax.Array,      # [B, S, KV, hd]
+    v_cache: jax.Array,
+    kv_len: jax.Array,       # [] or [B] — valid prefix length
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token attention against a preallocated KV cache."""
+    b, _, h, hd = q.shape
+    kv = k_cache.shape[2]
+    groups = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qh = q[:, 0].astype(F32) * scale                         # [B, H, hd]
+    qg = qh.reshape(b, kv, groups, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(F32))
+    pos = jnp.arange(k_cache.shape[1])
+    mask = pos[None, :] < jnp.reshape(kv_len, (-1, 1))        # [B or 1, S]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(F32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (params + apply)
+# ---------------------------------------------------------------------------
+
+def gqa_init(rng, cfg) -> dict:
+    d, h, kv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, dt),
+        "wk": dense_init(ks[1], d, kv * hd, dt),
+        "wv": dense_init(ks[2], d, kv * hd, dt),
+        "wo": dense_init(ks[3], h * hd, d, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    return p
+
+
+def gqa_specs(cfg) -> dict:
+    p = {
+        "wq": P(None, MODEL),
+        "wk": P(None, MODEL),
+        "wv": P(None, MODEL),
+        "wo": P(MODEL, None),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = P(None)
+        p["k_norm"] = P(None)
+    return p
+
+
+def gqa_qkv(params, cfg, x, positions):
+    """Project + RoPE. Returns q [B,S,H,hd], k/v [B,S,KV,hd]."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    k = (x @ params["wk"]).reshape(b, s, kv, hd)
+    v = (x @ params["wv"]).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    if cfg.pos_kind == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attend(params, cfg, x, positions, *, causal=True, q_offset=0,
+               kv_cache=None, kv_len=None):
+    """Full GQA block. With ``kv_cache=(k,v)`` and S==1 runs decode path.
+
+    Returns (out [B,S,d], (k_new, v_new)) — new KV for cache maintenance.
+    """
+    b, s, _ = x.shape
+    q, k, v = gqa_qkv(params, cfg, x, positions)
+    if kv_cache is not None:
+        kc, vc = kv_cache
+        if s != 1:
+            raise ValueError("cache path expects single-token decode")
+        out = decode_attention_append(q, kc, vc, k, v, kv_len)
+    else:
+        out = chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                kv_len=kv_len, q_chunk=cfg.attn_chunk,
+                                kv_chunk=cfg.attn_chunk)
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    return out.reshape(b, s, h * hd) @ params["wo"], (k, v)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(rng, cfg) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    dt = jnp.dtype(cfg.dtype)
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(rng, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, m.q_lora_rank, dt),
+        "wq_b": dense_init(ks[1], m.q_lora_rank, h * qk_head, dt),
+        "wkv_a": dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dt),
+        "wkv_b": dense_init(ks[3], m.kv_lora_rank,
+                            h * (m.qk_nope_head_dim + m.v_head_dim), dt),
+        "wo": dense_init(ks[4], h * m.v_head_dim, d, dt),
+        "q_a_norm": jnp.zeros((m.q_lora_rank,), dt),
+        "kv_a_norm": jnp.zeros((m.kv_lora_rank,), dt),
+    }
+
+
+def mla_specs(cfg) -> dict:
+    return {
+        "wq_a": P(None, None),
+        "wq_b": P(None, MODEL),
+        "wkv_a": P(None, None),
+        "wkv_b": P(None, MODEL),
+        "wo": P(MODEL, None),
+        "q_a_norm": P(None),
+        "kv_a_norm": P(None),
+    }
+
+
+def mla_attend(params, cfg, x, positions, *, causal=True, q_offset=0,
+               kv_cache=None, kv_len=None):
+    """MLA block. The cache stores the *compressed* latent + rope key —
+    [B, S, kv_lora + rope_dim] — which is MLA's entire point (DESIGN.md §5).
+
+    Returns (out, cache_row [B, S, kv_lora + rope]).
+    """
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q_lat = rmsnorm(x @ params["wq_a"], params["q_a_norm"], cfg.norm_eps)
+    q = (q_lat @ params["wq_b"]).reshape(b, s, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ params["wkv_a"]                        # [B,S,kv_lora+rope]
+    c_kv = rmsnorm(kv_a[..., :m.kv_lora_rank], params["kv_a_norm"],
+                   cfg.norm_eps)
+    k_rope = apply_rope(kv_a[..., None, m.kv_lora_rank:], positions,
+                        cfg.rope_theta)               # [B,S,1,rope]
+    cache_row = jnp.concatenate([c_kv, k_rope[..., 0, :]], axis=-1)
+
+    scale = 1.0 / math.sqrt(nope + rope_d)
+
+    if kv_cache is not None:
+        # Absorbed decode: attention runs in the compressed latent space —
+        # q_nope is folded through W_kv_b's key half so scores contract
+        # directly against the [B, S, kv_lora] cache, and the output latent
+        # is expanded through the value half. No per-step K/V rematerialize.
+        if s != 1:
+            raise ValueError("cache path expects single-token decode")
+        full = kv_cache                               # [B, Smax, lora+rope]
+        c_all, kr_all = full[..., :m.kv_lora_rank], full[..., m.kv_lora_rank:]
+        wkv_b = params["wkv_b"].reshape(m.kv_lora_rank, h, nope + vd)
+        wk_b, wv_b = wkv_b[..., :nope], wkv_b[..., nope:]
+        q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, wk_b)     # [B,1,H,lora]
+        s_lat = jnp.einsum("bshl,btl->bhst", q_lat.astype(F32),
+                           c_all.astype(F32))
+        s_rope = jnp.einsum("bshr,btr->bhst", q_rope.astype(F32),
+                            kr_all.astype(F32))
+        s_cache = (s_lat + s_rope) * scale
+        pos = jnp.arange(c_all.shape[1])
+        mask = pos[None, :] < jnp.reshape(kv_len, (-1, 1))
+        s_cache = jnp.where(mask[:, None, None, :], s_cache, NEG_INF)
+        # self term from the current token's own cache row
+        c_new, kr_new = (cache_row[..., :m.kv_lora_rank],
+                         cache_row[..., m.kv_lora_rank:])
+        s_self = (jnp.einsum("bshl,bsl->bhs", q_lat.astype(F32),
+                             c_new.astype(F32))
+                  + jnp.einsum("bshr,bsr->bhs", q_rope.astype(F32),
+                               kr_new.astype(F32))) * scale
+        p = jax.nn.softmax(
+            jnp.concatenate([s_cache, s_self[..., None]], axis=-1), axis=-1)
+        out_lat = jnp.einsum("bhst,btl->bshl", p[..., :-1],
+                             c_all.astype(F32))
+        out_lat += p[..., -1].transpose(0, 2, 1)[..., None] \
+            * c_new.astype(F32)[:, :, None, :]
+        out = jnp.einsum("bshl,lhv->bshv", out_lat.astype(x.dtype), wv_b)
+    else:
+        c_all, kr_all = c_kv, k_rope[..., 0, :]
+        kv = (c_all @ params["wkv_b"]).reshape(b, s, h, nope + vd)
+        k_nope, v = kv[..., :nope], kv[..., nope:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
+                                      k_nope.shape[:-1] + (rope_d,))],
+            axis=-1)
+        qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = chunked_attention(qfull, k, v, causal=causal, q_offset=q_offset,
+                                kv_len=kv_len, q_chunk=cfg.attn_chunk,
+                                kv_chunk=cfg.attn_chunk, scale=scale)
+    return out.reshape(b, s, h * vd) @ params["wo"], cache_row
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, d: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(rng, 3)
+    dt = jnp.dtype(dtype)
+    return {
+        "gate": dense_init(ks[0], d, d_ff, dt),
+        "up": dense_init(ks[1], d, d_ff, dt),
+        "down": dense_init(ks[2], d_ff, d, dt),
+    }
+
+
+def mlp_specs() -> dict:
+    return {"gate": P(None, MODEL), "up": P(None, MODEL),
+            "down": P(MODEL, None)}
+
+
+def mlp_apply(params, x):
+    return (jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
+            ) @ params["down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+VOCAB_PAD = 256     # table rows pad to this multiple (axis divisibility)
+
+
+def pad_vocab(v: int) -> int:
+    return -(-v // VOCAB_PAD) * VOCAB_PAD
+
+
+def embed_init(rng, vocab: int, d: int, dtype) -> jax.Array:
+    """[pad_vocab(V), d] table; rows >= V are never gathered and their
+    logits are masked in :func:`unembed`."""
+    return (jax.random.normal(rng, (pad_vocab(vocab), d), F32)
+            * 0.02).astype(dtype)
+
+
+def embed_specs() -> P:
+    return P(MODEL, None)   # vocab-sharded: the PIR DB layout (DESIGN.md §4)
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, table: jax.Array,
+            n_valid: Optional[int] = None) -> jax.Array:
+    """Logits against a (possibly tied, vocab-padded) [V_pad, d] table.
+
+    ``n_valid`` masks the padding rows to -inf so softmax/CE/argmax see
+    exactly the true vocabulary.
+    """
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(F32), table.astype(F32))
+    if n_valid is not None and n_valid < table.shape[0]:
+        valid = jnp.arange(table.shape[0]) < n_valid
+        logits = jnp.where(valid, logits, NEG_INF)
+    return logits

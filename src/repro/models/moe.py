@@ -1,0 +1,218 @@
+"""Mixture-of-experts FFN with sort-based capacity dispatch.
+
+Two execution paths, chosen by sequence length:
+
+``dispatch`` (train / prefill)
+    Per-sequence sort-based dispatch: tokens of each sequence are routed,
+    sorted by expert id, packed into a capacity-bounded buffer
+    ``[B, E, C, d]``, run through a batched expert GEMM, and combined back.
+    FLOPs scale as ``B·E·C·d·d_e ≈ capacity_factor × active`` — the roofline
+    ratio MODEL_FLOPS/HLO_FLOPs stays honest (a dense one-hot dispatch à la
+    Mesh-TF would be quadratic in tokens). Grouping by sequence keeps every
+    scatter/gather *within* a batch shard, so GSPMD needs no data-dependent
+    cross-shard movement: the only collectives are the expert-parallel ones
+    on the E axis.
+
+``gather`` (decode, S == 1)
+    One token per sequence: gathering top-k expert weight slices per token
+    costs exactly the active-parameter bytes — the regime where decode is
+    weight-bandwidth-bound anyway — and avoids a 1-token-deep buffer over
+    all E experts (which would inflate decode FLOPs by E/k).
+
+Router: softmax over top-k logits (renormalized), optional shared experts
+(DeepSeek-style always-on), aux-free sigmoid bias omitted — load-balance loss
+is returned for the training objective.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import BATCH, MODEL, dense_init
+
+F32 = jnp.float32
+
+
+def moe_init(rng, cfg) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 7)
+    p = {
+        "router": dense_init(ks[0], d, m.n_experts, jnp.float32),
+        "gate": _expert_init(ks[1], m.n_experts, d, m.d_expert, dt),
+        "up": _expert_init(ks[2], m.n_experts, d, m.d_expert, dt),
+        "down": _expert_init(ks[3], m.n_experts, m.d_expert, d, dt),
+    }
+    if m.n_shared:
+        ff = m.n_shared * m.d_expert
+        p["shared"] = {
+            "gate": dense_init(ks[4], d, ff, dt),
+            "up": dense_init(ks[5], d, ff, dt),
+            "down": dense_init(ks[6], ff, d, dt),
+        }
+    return p
+
+
+def _expert_init(rng, e, d_in, d_out, dt):
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.uniform(rng, (e, d_in, d_out), F32, -scale, scale)
+            ).astype(dt)
+
+
+def moe_specs(cfg) -> dict:
+    m = cfg.moe
+    p = {
+        "router": P(None, None),
+        # expert parallelism: experts sharded over the model axis
+        "gate": P(MODEL, None, None),
+        "up": P(MODEL, None, None),
+        "down": P(MODEL, None, None),
+    }
+    if m.n_shared:
+        p["shared"] = {"gate": P(None, MODEL), "up": P(None, MODEL),
+                       "down": P(MODEL, None)}
+    return p
+
+
+def _route(params, cfg, x_flat):
+    """Top-k routing. x_flat [T, d] -> (probs [T, K], idx [T, K], aux_loss)."""
+    m = cfg.moe
+    logits = (x_flat.astype(F32) @ params["router"]).astype(F32)  # [T, E]
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs_full, m.top_k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance auxiliary: E * sum_e f_e * p_e.
+    t = x_flat.shape[0]
+    density = jnp.zeros((m.n_experts,), F32).at[top_i.reshape(-1)].add(
+        1.0 / (t * m.top_k))
+    mean_p = jnp.mean(probs_full, axis=0)
+    aux = m.n_experts * jnp.sum(density * mean_p)
+    return top_p, top_i, aux
+
+
+def _expert_ffn(params, buf):
+    """buf [..., E, C, d] -> [..., E, C, d] through per-expert SwiGLU."""
+    h = jax.nn.silu(jnp.einsum("...ecd,edf->...ecf", buf, params["gate"])) \
+        * jnp.einsum("...ecd,edf->...ecf", buf, params["up"])
+    return jnp.einsum("...ecf,efd->...ecd", h, params["down"])
+
+
+def moe_apply_dispatch(params, cfg, x) -> Tuple[jax.Array, jax.Array]:
+    """Sort-based capacity dispatch. x: [B, S, d] -> ([B, S, d], aux).
+
+    Deliberately *scatter-free*: packing into the [E, C, d] buffer and the
+    combine back to token order are both expressed as gathers over the
+    expert-sorted permutation. GSPMD partitions batched gathers along the
+    (sharded) sequence-batch dim; scatter-adds here made it replicate the
+    whole dispatch buffer per device (observed 255 GiB/device on the
+    grok-1 train cell before this rewrite). ``shard_hint``s pin the big
+    intermediates to (batch over data, experts over model).
+    """
+    from repro.models.layers import BATCH, MODEL, shard_hint
+    m = cfg.moe
+    b, s, d = x.shape
+    tk = s * m.top_k
+    capacity = max(8, int(math.ceil(tk / m.n_experts * m.capacity_factor)))
+    capacity = min(capacity, tk)
+
+    def per_seq(xs):                       # xs: [S, d]
+        top_p, top_i, aux = _route(params, cfg, xs)
+        flat_e = top_i.reshape(-1)                          # [S*K]
+        flat_p = top_p.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(s), m.top_k)         # source token
+        order = jnp.argsort(flat_e)
+        se, sp, st = flat_e[order], flat_p[order], flat_t[order]
+        # rank within expert group
+        group_start = jnp.searchsorted(se, jnp.arange(m.n_experts),
+                                       side="left")
+        pos = jnp.arange(tk) - group_start[se]
+        keep = pos < capacity
+        # pack [E, C, d] by GATHER: slot (e, c) reads sorted row
+        # group_start[e] + c, masked where that overruns e's group.
+        slot_src = group_start[:, None] + jnp.arange(capacity)[None, :]
+        slot_valid = slot_src < jnp.append(group_start[1:], tk)[:, None]
+        slot_src_c = jnp.clip(slot_src, 0, tk - 1)
+        tok_for_slot = st[slot_src_c]                       # [E, C]
+        rows = xs[tok_for_slot]                             # gather [E,C,d]
+        buf = jnp.where(slot_valid[..., None], rows, 0).astype(x.dtype)
+        # combine back: sorted index i lives in slot (se[i], pos[i])
+        return buf, (se, sp, st, pos, keep, aux)
+
+    buf, (se, sp, st, pos, keep, aux) = jax.vmap(per_seq)(x)
+    buf = shard_hint(buf, BATCH, MODEL, None, None)
+    out_buf = _expert_ffn(params, buf)                      # [B, E, C, d]
+    out_buf = shard_hint(out_buf, BATCH, MODEL, None, None)
+
+    def combine(out_buf_b, se_b, sp_b, st_b, pos_b, keep_b):
+        pos_c = jnp.clip(pos_b, 0, capacity - 1)
+        back = out_buf_b[se_b, pos_c]                       # gather [S*K, d]
+        back = jnp.where(keep_b[:, None], back, 0) \
+            * sp_b[:, None].astype(x.dtype)
+        # token t's K slots are contiguous in the inverse permutation
+        inv = jnp.argsort(st_b * tk + jnp.arange(tk))       # stable by token
+        back_tok = back[inv].reshape(s, m.top_k, d)
+        return jnp.sum(back_tok, axis=1)
+
+    out = jax.vmap(combine)(out_buf, se, sp, st, pos, keep)
+    out = shard_hint(out, BATCH, None, None)
+    out = out + _shared_ffn(params, x)
+    return out.astype(x.dtype), jnp.mean(aux)
+
+
+def moe_apply_gather(params, cfg, x) -> Tuple[jax.Array, jax.Array]:
+    """Decode path: gather top-k expert weight slices per token. x [B,1,d].
+
+    The per-token weight gather costs exactly the active-parameter bytes —
+    the quantity decode is bound by anyway. Hints keep the gathered slices
+    sharded (tokens over data, expert-ffn dim over model).
+    """
+    from repro.models.layers import BATCH, MODEL, shard_hint
+    m = cfg.moe
+    b, s, d = x.shape
+    x_flat = x.reshape(b * s, d)
+    top_p, top_i, aux = _route(params, cfg, x_flat)          # [T, K]
+    wg = shard_hint(params["gate"][top_i], BATCH, None, None, MODEL)
+    wu = shard_hint(params["up"][top_i], BATCH, None, None, MODEL)
+    wd = shard_hint(params["down"][top_i], BATCH, None, MODEL, None)
+    h = jax.nn.silu(jnp.einsum("td,tkdf->tkf", x_flat, wg)) \
+        * jnp.einsum("td,tkdf->tkf", x_flat, wu)
+    y = jnp.einsum("tkf,tkfd->tkd", h, wd)
+    out = jnp.sum(y * top_p[..., None].astype(y.dtype), axis=1)
+    out = out.reshape(b, s, d) + _shared_ffn(params, x)
+    return out.astype(x.dtype), aux
+
+
+def _shared_ffn(params, x):
+    if "shared" not in params:
+        return jnp.zeros_like(x)
+    sp = params["shared"]
+    return (jax.nn.silu(x @ sp["gate"]) * (x @ sp["up"])) @ sp["down"]
+
+
+def moe_apply(params, cfg, x) -> Tuple[jax.Array, jax.Array]:
+    """Route to the right execution shape.
+
+    * S > 1 (train/prefill): per-sequence sort dispatch.
+    * S == 1, batch >= E/K (decode at serving batch sizes): *batch-global*
+      dispatch — all B tokens form one dispatch group, so each expert's
+      weights are read once per layer. The per-token gather alternative
+      materializes a weight copy per (token, expert): measured 11.8 TiB/dev
+      of fusion traffic on the deepseek decode cell (128 tokens × 8 experts
+      × 14.7M-param experts × 58 layers) before this routing.
+    * tiny decode batches: per-token gather (reads ≤ B·K experts, fewer
+      than a full sweep).
+    """
+    m = cfg.moe
+    if x.shape[1] == 1:
+        b = x.shape[0]
+        if b * m.top_k >= m.n_experts:
+            y, aux = moe_apply_dispatch(params, cfg,
+                                        x.reshape(1, b, x.shape[2]))
+            return y.reshape(b, 1, x.shape[2]), aux
+        return moe_apply_gather(params, cfg, x)
+    return moe_apply_dispatch(params, cfg, x)

@@ -1,0 +1,81 @@
+"""Model zoo dispatch: ModelConfig.family -> model implementation.
+
+Every model exposes the same functional protocol:
+
+  init_params(rng) -> params        param_specs() -> PartitionSpec pytree
+  loss(params, tokens, **aux_inputs) -> (scalar, metrics)
+  forward(params, tokens, **aux)    -> (logits, aux_loss)
+  prefill(params, tokens, **aux)    -> (last_logits, cache)
+  decode(params, cache, tokens)     -> (logits, cache')
+  init_cache(batch, capacity)       cache_specs()
+
+``aux_inputs`` carries the modality-frontend stubs: ``prefix_embeds`` for
+VLM patch embeddings, ``frame_embeds`` for audio frames (precomputed by the
+client per the assignment — the frontend itself is not modeled).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models.encdec import EncDecLM
+from repro.models.hybrid import Zamba2Model
+from repro.models.transformer import TransformerLM
+from repro.models.xlstm import XLSTMModel
+
+FAMILIES = ("dense", "moe", "vlm", "audio", "ssm", "hybrid")
+
+
+def build_model(cfg: ModelConfig, *, remat: str = "block"):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return TransformerLM(cfg, remat=remat)
+    if cfg.family == "audio":
+        return EncDecLM(cfg, remat=remat)
+    if cfg.family == "ssm":
+        return XLSTMModel(cfg, remat=remat)
+    if cfg.family == "hybrid":
+        return Zamba2Model(cfg, remat=remat)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """ShapeDtypeStruct stand-ins + logical PartitionSpecs for step inputs.
+
+    Returns (structs, pspecs): tokens (+ modality stubs). ``decode`` shapes
+    get a single-token stream; the KV cache spec is produced separately via
+    ``jax.eval_shape(model.init_cache, ...)`` by the launcher.
+    """
+    from jax.sharding import PartitionSpec as P
+    b = shape.global_batch
+    dt = np.dtype("int32")
+    batch_axes = ("pod", "data")
+    structs: Dict[str, Any] = {}
+    pspecs: Dict[str, Any] = {}
+
+    if shape.kind == "decode":
+        structs["tokens"] = jax.ShapeDtypeStruct((b, 1), dt)
+        pspecs["tokens"] = P(batch_axes, None)
+        return structs, pspecs
+
+    s = shape.seq_len
+    if cfg.family == "vlm":
+        n_front = cfg.n_frontend_tokens
+        structs["tokens"] = jax.ShapeDtypeStruct((b, s - n_front), dt)
+        structs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, n_front, cfg.d_model), np.dtype(cfg.dtype))
+        pspecs["tokens"] = P(batch_axes, None)
+        pspecs["prefix_embeds"] = P(batch_axes, None, None)
+    elif cfg.family == "audio":
+        structs["tokens"] = jax.ShapeDtypeStruct((b, s), dt)
+        structs["frame_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_len, cfg.d_model), np.dtype(cfg.dtype))
+        pspecs["tokens"] = P(batch_axes, None)
+        pspecs["frame_embeds"] = P(batch_axes, None, None)
+    else:
+        structs["tokens"] = jax.ShapeDtypeStruct((b, s), dt)
+        pspecs["tokens"] = P(batch_axes, None)
+    return structs, pspecs

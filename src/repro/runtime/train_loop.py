@@ -1,0 +1,148 @@
+"""Fault-tolerant training loop.
+
+Wiring per step:
+  data pipeline (stateless, step-keyed)  ->  pjit train_step  ->  metrics
+  heartbeat + straggler EWMA             ->  policy hooks
+  NaN/Inf loss                           ->  PoisonPolicy skip / rewind
+  checkpoint cadence + SIGTERM           ->  async CheckpointManager
+
+Rewind restores the last good checkpoint in-place (same mesh) — the
+elastic path (different mesh) goes through ``runtime.elastic``.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.config import RunConfig
+from repro.data.pipeline import TokenPipeline
+from repro.runtime.fault import (HeartbeatRegistry, PoisonPolicy,
+                                 StragglerMonitor, retry_step)
+from repro.runtime.steps import TrainStep, make_train_step
+
+
+@dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    keep_ckpts: int = 3
+
+
+@dataclass
+class TrainResult:
+    losses: List[float] = field(default_factory=list)
+    skipped_steps: int = 0
+    rewinds: int = 0
+    final_step: int = 0
+
+
+class TrainLoop:
+    def __init__(self, run: RunConfig, mesh, loop_cfg: TrainLoopConfig,
+                 *, log: Callable[[str], None] = print):
+        self.run = run
+        self.mesh = mesh
+        self.cfg = loop_cfg
+        self.log = log
+        self.ts: TrainStep = make_train_step(run, mesh)
+        self.pipeline = TokenPipeline(run.model, run.shape, seed=run.seed)
+        self.heartbeat = HeartbeatRegistry()
+        self.poison = PoisonPolicy()
+        self.straggler = StragglerMonitor()
+        self.ckpt = (CheckpointManager(loop_cfg.ckpt_dir,
+                                       keep=loop_cfg.keep_ckpts)
+                     if loop_cfg.ckpt_dir else None)
+        self._stop = False
+
+    def _install_sigterm(self):
+        def handler(signum, frame):
+            self.log("[train] SIGTERM — checkpointing and stopping")
+            self._stop = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass            # non-main thread (tests)
+
+    def _save(self, step, params, opt_state, blocking=False):
+        if self.ckpt is None:
+            return
+        self.ckpt.save(step, {"params": params, "opt": opt_state},
+                       metadata={"config": self.run.to_dict()},
+                       blocking=blocking)
+
+    def _restore(self, params_like, opt_like):
+        tree, meta = self.ckpt.restore(
+            {"params": params_like, "opt": opt_like},
+            shardings={"params": self.ts.param_shardings,
+                       "opt": self.ts.opt_shardings})
+        return tree["params"], tree["opt"], meta["step"]
+
+    def run_loop(self, *, start_step: int = 0, resume: bool = False
+                 ) -> TrainResult:
+        self._install_sigterm()
+        rng = jax.random.PRNGKey(self.run.seed)
+        params, opt_state, ef = self.ts.init_state(rng)
+        step = start_step
+        if resume and self.ckpt and self.ckpt.latest_step() is not None:
+            params, opt_state, step = self._restore(params, opt_state)
+            self.log(f"[train] resumed from step {step}")
+
+        res = TrainResult()
+        last_good = step
+        while step < self.cfg.total_steps and not self._stop:
+            t0 = time.monotonic()
+            n_micro = self.run.microbatches
+            batch = {}
+            for k, v in self.pipeline.batch(step).items():
+                if n_micro > 1:   # [micro, B/micro, ...] — see steps.py
+                    v = v.reshape((n_micro, v.shape[0] // n_micro)
+                                  + v.shape[1:])
+                batch[k] = jax.numpy.asarray(v)
+
+            def do_step():
+                return self.ts.step(params, opt_state, ef, batch)
+
+            out = retry_step(do_step, retries=2)
+            new_params, new_opt, new_ef, metrics = out
+            loss = float(metrics["loss"])
+            verdict = self.poison.observe(loss)
+            if verdict == "ok":
+                params, opt_state, ef = new_params, new_opt, new_ef
+                res.losses.append(loss)
+            elif verdict == "skip":
+                res.skipped_steps += 1
+                self.log(f"[train] step {step}: non-finite loss — skipped")
+            else:   # rewind
+                res.rewinds += 1
+                if self.ckpt and self.ckpt.latest_step() is not None:
+                    self.ckpt.wait()
+                    params, opt_state, last_good = self._restore(
+                        params, opt_state)
+                    step = last_good
+                    self.log(f"[train] rewound to step {last_good}")
+                    continue
+            dt = time.monotonic() - t0
+            self.heartbeat.beat("proc0")
+            self.straggler.record("proc0", dt)
+            if self.cfg.log_every and step % self.cfg.log_every == 0:
+                self.log(f"[train] step {step} loss {loss:.4f} "
+                         f"({dt*1e3:.0f} ms)")
+            step += 1
+            if self.ckpt_due(step):
+                self._save(step, params, opt_state)
+                last_good = step
+        if self.ckpt:
+            self._save(step, params, opt_state, blocking=True)
+        res.final_step = step
+        return res
+
+    def ckpt_due(self, step: int) -> bool:
+        return (self.ckpt is not None and self.cfg.ckpt_every
+                and step % self.cfg.ckpt_every == 0)

@@ -1,0 +1,82 @@
+"""Data pipeline determinism/sharding + bit-packing roundtrips."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.configs import SMOKES
+from repro.crypto.packing import (bytes_to_words, pack_bits_to_words,
+                                  unpack_words_to_bits, words_to_bytes)
+from repro.data.pipeline import QueryPipeline, TokenPipeline
+
+SHAPE = ShapeConfig(name="t", seq_len=16, global_batch=8, kind="train")
+
+
+def test_tokens_deterministic_and_step_dependent():
+    p = TokenPipeline(SMOKES["granite-3-2b"], SHAPE, seed=1)
+    a1 = p.tokens(0)
+    a2 = TokenPipeline(SMOKES["granite-3-2b"], SHAPE, seed=1).tokens(0)
+    np.testing.assert_array_equal(a1, a2)
+    assert not np.array_equal(a1, p.tokens(1))
+    assert a1.shape == (8, 16)
+    assert a1.min() >= 0 and a1.max() < SMOKES["granite-3-2b"].vocab
+
+
+def test_host_shards_are_disjoint_streams():
+    ps = [TokenPipeline(SMOKES["granite-3-2b"], SHAPE, seed=1,
+                        process_index=i, num_processes=4) for i in range(4)]
+    batches = [p.tokens(0) for p in ps]
+    assert batches[0].shape == (2, 16)
+    assert not np.array_equal(batches[0], batches[1])
+
+
+def test_modality_stub_batches():
+    vlm = SMOKES["llava-next-34b"]
+    p = TokenPipeline(vlm, SHAPE, seed=0)
+    b = p.batch(0)
+    assert b["prefix_embeds"].shape == (8, vlm.n_frontend_tokens,
+                                        vlm.d_model)
+    assert b["tokens"].shape == (8, 16 - vlm.n_frontend_tokens)
+    audio = SMOKES["whisper-small"]
+    b = TokenPipeline(audio, SHAPE, seed=0).batch(0)
+    assert b["frame_embeds"].shape == (8, audio.encoder_len, audio.d_model)
+
+
+def test_query_pipeline():
+    qp = QueryPipeline(n_items=1 << 10, batch=32, seed=3)
+    i1, i2 = qp.indices(0), qp.indices(0)
+    np.testing.assert_array_equal(i1, i2)
+    assert i1.shape == (32,)
+    assert (i1 < (1 << 10)).all()
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=8))
+def test_words_bytes_roundtrip(k):
+    rng = np.random.default_rng(k)
+    w = jnp.asarray(rng.integers(0, 1 << 32, size=(3, k), dtype=np.uint32))
+    back = bytes_to_words(words_to_bytes(w))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=4))
+def test_bits_words_roundtrip(k):
+    rng = np.random.default_rng(k)
+    bits = jnp.asarray(rng.integers(0, 2, size=(2, 32 * k),
+                                    dtype=np.uint32))
+    back = unpack_words_to_bits(pack_bits_to_words(bits))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(bits))
+
+
+def test_packing_rejects_bad_sizes():
+    with pytest.raises(ValueError):
+        bytes_to_words(jnp.zeros((3,), jnp.uint8))
+    with pytest.raises(ValueError):
+        pack_bits_to_words(jnp.zeros((31,), jnp.uint32))

@@ -1,0 +1,121 @@
+"""DPF correctness: unit + hypothesis property tests.
+
+Invariants under test (the cryptographic contract of core/dpf.py):
+  P1  Eval(k0, j) XOR Eval(k1, j) == 1{j == alpha}      (point function)
+  P2  eval_range tiles eval_all exactly (shard-parallel form)
+  P3  additive word shares sum to beta * 1{j == alpha} mod 2^32
+  P4  byte shares sum to 1{j == alpha} mod 256 (MXU matmul form)
+  P5  each key alone is (statistically) uninformative: leaf bits of a
+      single party are ~balanced — a smoke-level distinguisher check
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import dpf
+
+RNG = np.random.default_rng(7)
+
+
+def _keys(alpha, log_n, **kw):
+    return dpf.gen_keys(np.random.default_rng(42), alpha, log_n, **kw)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=9), st.data())
+def test_onehot_property(log_n, data):
+    alpha = data.draw(st.integers(0, (1 << log_n) - 1))
+    k0, k1 = _keys(alpha, log_n)
+    _, t0 = dpf.eval_all(k0)
+    _, t1 = dpf.eval_all(k1)
+    onehot = np.asarray(t0 ^ t1)
+    assert onehot.sum() == 1
+    assert onehot[alpha] == 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=2, max_value=8), st.data())
+def test_eval_range_tiles_eval_all(log_n, data):
+    alpha = data.draw(st.integers(0, (1 << log_n) - 1))
+    log_range = data.draw(st.integers(0, log_n))
+    k0, _ = _keys(alpha, log_n)
+    seeds_all, t_all = dpf.eval_all(k0)
+    n_blocks = 1 << (log_n - log_range)
+    width = 1 << log_range
+    for blk in range(n_blocks):
+        seeds, t = dpf.eval_range(k0, blk, log_range)
+        np.testing.assert_array_equal(
+            np.asarray(t), np.asarray(t_all[blk * width:(blk + 1) * width]))
+        np.testing.assert_array_equal(
+            np.asarray(seeds),
+            np.asarray(seeds_all[blk * width:(blk + 1) * width]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=8),
+       st.integers(min_value=1, max_value=4), st.data())
+def test_additive_word_shares(log_n, n_words, data):
+    alpha = data.draw(st.integers(0, (1 << log_n) - 1))
+    beta = data.draw(st.lists(st.integers(0, (1 << 32) - 1),
+                              min_size=n_words, max_size=n_words))
+    payload = np.asarray(beta, np.uint32)
+    k0, k1 = _keys(alpha, log_n, payload=payload)
+    out = []
+    for k in (k0, k1):
+        seeds, t = dpf.eval_all(k)
+        out.append(np.asarray(dpf.leaf_words(k, seeds, t, n_words),
+                              np.uint32))
+    total = (out[0].astype(np.uint64) + out[1].astype(np.uint64)) \
+        % (1 << 32)
+    expect = np.zeros(((1 << log_n), n_words), np.uint64)
+    expect[alpha] = payload
+    np.testing.assert_array_equal(total, expect)
+
+
+def test_byte_shares_sum_mod_256():
+    log_n = 7
+    alpha = 93
+    k0, k1 = _keys(alpha, log_n, payload=np.array([1], np.uint32))
+    shares = []
+    for k in (k0, k1):
+        s = dpf.eval_bytes_batch(dpf.stack_keys([k]), 0, log_n)
+        shares.append(np.asarray(s, np.int64)[0])
+    total = (shares[0] + shares[1]) % 256
+    expect = np.zeros(1 << log_n, np.int64)
+    expect[alpha] = 1
+    np.testing.assert_array_equal(total, expect)
+
+
+def test_single_key_leaf_bits_balanced():
+    """One party's selection bits look ~uniform (no trivial leakage)."""
+    log_n = 12
+    k0, _ = _keys(1234, log_n)
+    _, t = dpf.eval_all(k0)
+    frac = float(np.asarray(t).mean())
+    assert 0.40 < frac < 0.60, frac
+
+
+def test_keys_differ_per_alpha():
+    k_a, _ = _keys(3, 6)
+    k_b, _ = _keys(4, 6)
+    assert not np.array_equal(np.asarray(k_a.cw_seed),
+                              np.asarray(k_b.cw_seed))
+
+
+def test_batched_eval_matches_single():
+    log_n = 6
+    alphas = [0, 5, 63]
+    keys = [dpf.gen_keys(np.random.default_rng(i), a, log_n)[0]
+            for i, a in enumerate(alphas)]
+    batch = dpf.stack_keys(keys)
+    bits = np.asarray(dpf.eval_bits_batch(batch, 0, log_n))
+    for i, k in enumerate(keys):
+        _, t = dpf.eval_all(k)
+        np.testing.assert_array_equal(bits[i], np.asarray(t))
+
+
+def test_invalid_alpha_raises():
+    with pytest.raises(ValueError):
+        _keys(1 << 5, 5)

@@ -1,0 +1,136 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+All three kernels are integer-exact, so every comparison is array_equal.
+Interpret mode executes the kernel bodies on CPU; the grid>1 GGM case runs
+at reduced rounds only because XLA:CPU compile time of the interpreted
+emulation grows superlinearly in rounds × grid (kernels/ops.py note) —
+the indexing logic under test is round-count independent.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import dpf
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(11)
+
+
+# ---------------------------------------------------------------------------
+# dpXOR
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q,r,w,tile", [
+    (1, 64, 8, 64),
+    (4, 256, 8, 64),       # grid = 4
+    (8, 512, 16, 128),     # grid = 4, wider records
+    (2, 1024, 4, 1024),    # single tile
+])
+def test_dpxor_sweep(q, r, w, tile):
+    db = jnp.asarray(RNG.integers(0, 1 << 32, size=(r, w), dtype=np.uint32))
+    bits = jnp.asarray(RNG.integers(0, 2, size=(q, r), dtype=np.uint32))
+    got = ops.dpxor(db, bits, tile_r=tile)
+    want = ref.dpxor_ref(db, bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_dpxor_transposed_layout():
+    db = jnp.asarray(RNG.integers(0, 1 << 32, size=(256, 8), dtype=np.uint32))
+    bits = jnp.asarray(RNG.integers(0, 2, size=(3, 256), dtype=np.uint32))
+    got = ops.dpxor_transposed(db.T, bits, tile_r=128)
+    want = ref.dpxor_ref(db, bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 255))
+def test_dpxor_onehot_selects_row(row):
+    """A one-hot selection vector must return exactly that DB row."""
+    db = jnp.asarray(RNG.integers(0, 1 << 32, size=(256, 8),
+                                  dtype=np.uint32))
+    bits = np.zeros((1, 256), np.uint32)
+    bits[0, row] = 1
+    got = np.asarray(ops.dpxor(db, jnp.asarray(bits), tile_r=64))
+    np.testing.assert_array_equal(got[0], np.asarray(db)[row])
+
+
+# ---------------------------------------------------------------------------
+# GGM expansion
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 4, 64])
+def test_ggm_expand_matches_ref(n):
+    seeds = jnp.asarray(RNG.integers(0, 1 << 32, size=(n, 4),
+                                     dtype=np.uint32))
+    t = jnp.asarray(RNG.integers(0, 2, size=(n,), dtype=np.uint32))
+    cw_s = jnp.asarray(RNG.integers(0, 1 << 32, size=(4,), dtype=np.uint32))
+    cw_t = jnp.asarray(RNG.integers(0, 2, size=(2,), dtype=np.uint32))
+    got_c, got_t = ops.ggm_expand(seeds, t, cw_s, cw_t)
+    want_c, want_t = ref.ggm_expand_ref(seeds, t, cw_s, cw_t)
+    np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
+    np.testing.assert_array_equal(np.asarray(got_t), np.asarray(want_t))
+
+
+def test_ggm_expand_grid_indexing_low_rounds():
+    """grid=4 tiles at rounds=2: validates BlockSpec index maps."""
+    n, tile = 256, 64
+    seeds = jnp.asarray(RNG.integers(0, 1 << 32, size=(n, 4),
+                                     dtype=np.uint32))
+    t = jnp.asarray(RNG.integers(0, 2, size=(n,), dtype=np.uint32))
+    cw_s = jnp.asarray(RNG.integers(0, 1 << 32, size=(4,), dtype=np.uint32))
+    cw_t = jnp.asarray(RNG.integers(0, 2, size=(2,), dtype=np.uint32))
+    got_c, got_t = ops.ggm_expand(seeds, t, cw_s, cw_t, rounds=2, tile=tile)
+    want_c, want_t = ref.ggm_expand_ref(seeds, t, cw_s, cw_t, rounds=2)
+    np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
+    np.testing.assert_array_equal(np.asarray(got_t), np.asarray(want_t))
+
+
+def test_ggm_leaf_path_matches_dpf():
+    """Full-domain kernel-driven expansion == core.dpf.eval_all."""
+    log_n = 6
+    k0, k1 = dpf.gen_keys(np.random.default_rng(5), 21, log_n)
+    for k in (k0, k1):
+        s_ref, t_ref = dpf.eval_all(k)
+        s_got, t_got = ops.ggm_eval_leaves(
+            k.root_seed, np.uint32(k.party), k.cw_seed, k.cw_t, log_n)
+        np.testing.assert_array_equal(np.asarray(s_got), np.asarray(s_ref))
+        np.testing.assert_array_equal(np.asarray(t_got), np.asarray(t_ref))
+
+
+# ---------------------------------------------------------------------------
+# PIR matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q,r,l,tiles", [
+    (8, 1024, 128, (8, 512, 128)),    # grid over reduction
+    (2, 256, 32, (2, 256, 32)),       # single tile
+    (16, 512, 256, (8, 256, 128)),    # grid over all three dims
+])
+def test_pir_matmul_sweep(q, r, l, tiles):
+    s = jnp.asarray(RNG.integers(-128, 128, size=(q, r), dtype=np.int8))
+    d = jnp.asarray(RNG.integers(-128, 128, size=(r, l), dtype=np.int8))
+    got = ops.pir_gemm(s, d, tile_q=tiles[0], tile_r=tiles[1],
+                       tile_l=tiles[2])
+    want = ref.pir_matmul_ref(s, d)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pir_matmul_mod256_semantics():
+    """int32 accumulation preserves the Z_256 residue (2^8 | 2^32)."""
+    q, r, l = 2, 512, 16
+    s0 = RNG.integers(0, 256, size=(q, r)).astype(np.uint8)
+    s1 = (np.zeros_like(s0) - s0)           # additive complements mod 256
+    onehot = np.zeros((q, r), np.uint8)
+    onehot[0, 3] = 1
+    onehot[1, 100] = 1
+    s1 = (onehot - s0).astype(np.uint8)
+    d = RNG.integers(0, 256, size=(r, l)).astype(np.uint8)
+    r0 = np.asarray(ops.pir_gemm(jnp.asarray(s0.view(np.int8)),
+                                 jnp.asarray(d.view(np.int8))))
+    r1 = np.asarray(ops.pir_gemm(jnp.asarray(s1.view(np.int8)),
+                                 jnp.asarray(d.view(np.int8))))
+    rec = (r0.astype(np.int64) + r1.astype(np.int64)) % 256
+    np.testing.assert_array_equal(rec[0], d[3])
+    np.testing.assert_array_equal(rec[1], d[100])

@@ -1,0 +1,126 @@
+"""Runtime: fault policies, straggler logic, elastic planning, train loop."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.config import MeshConfig, OptimizerConfig, RunConfig
+from repro.configs import SMOKES
+from repro.configs.shapes import SMOKE_TRAIN
+from repro.launch.mesh import make_local_mesh
+from repro.runtime.elastic import plan_mesh, rebuild_mesh
+from repro.runtime.fault import (HeartbeatRegistry, PoisonPolicy,
+                                 StragglerMonitor, retry_step)
+
+
+# ---------------------------------------------------------------------------
+# fault policies (injectable clocks — deterministic)
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_suspects():
+    t = [0.0]
+    reg = HeartbeatRegistry(timeout=10.0, clock=lambda: t[0])
+    reg.beat("a")
+    reg.beat("b")
+    t[0] = 5.0
+    reg.beat("b")
+    t[0] = 12.0
+    assert reg.suspects() == ["a"]
+    assert reg.healthy() == ["b"]
+
+
+def test_retry_step_backoff():
+    calls = {"n": 0}
+    sleeps = []
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert retry_step(flaky, retries=3, sleep=sleeps.append) == "ok"
+    assert sleeps == [0.5, 1.0]
+
+
+def test_retry_step_exhausts():
+    def always():
+        raise RuntimeError("down")
+    with pytest.raises(RuntimeError):
+        retry_step(always, retries=2, sleep=lambda s: None)
+
+
+def test_poison_policy_transitions():
+    p = PoisonPolicy(max_consecutive=3)
+    assert p.observe(1.0) == "ok"
+    assert p.observe(float("nan")) == "skip"
+    assert p.observe(float("inf")) == "skip"
+    assert p.observe(float("nan")) == "rewind"
+    assert p.consecutive == 0
+    assert p.total_skipped == 3
+
+
+def test_straggler_detection_and_reassign():
+    mon = StragglerMonitor(factor=2.0, alpha=1.0)
+    for c, lat in (("c0", 1.0), ("c1", 1.1), ("c2", 5.0)):
+        mon.record(c, lat)
+    assert mon.stragglers() == ["c2"]
+    queues = {"c0": [1], "c1": [2], "c2": [3, 4]}
+    out = mon.reassign(queues)
+    assert out["c2"] == []
+    assert sorted(sum(out.values(), [])) == [1, 2, 3, 4]
+
+
+# ---------------------------------------------------------------------------
+# elastic planning
+# ---------------------------------------------------------------------------
+
+def test_plan_mesh_shrinks_data_axis():
+    cfg = plan_mesh(256, model_axis=16)
+    assert cfg.shape == (16, 16)
+    cfg = plan_mesh(192, model_axis=16)   # lost 4 nodes of 16 devices
+    assert cfg.shape == (8, 16)           # data halves, model pinned
+    cfg = plan_mesh(512, model_axis=16, prefer_pods=2)
+    assert cfg.shape == (2, 16, 16)
+
+
+def test_rebuild_mesh_local():
+    mesh = rebuild_mesh(model_axis=1)
+    assert "model" in mesh.axis_names
+
+
+# ---------------------------------------------------------------------------
+# train loop end-to-end (smoke scale): ckpt + resume + rewind path
+# ---------------------------------------------------------------------------
+
+def _loop(tmp_path, steps=6):
+    from repro.runtime.train_loop import TrainLoop, TrainLoopConfig
+    run = RunConfig(
+        model=SMOKES["granite-3-2b"], shape=SMOKE_TRAIN,
+        mesh=MeshConfig(shape=(1, 1), axes=("data", "model")),
+        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=1,
+                                  total_steps=steps))
+    return TrainLoop(run, make_local_mesh(),
+                     TrainLoopConfig(total_steps=steps, ckpt_every=2,
+                                     ckpt_dir=str(tmp_path), log_every=0),
+                     log=lambda s: None)
+
+
+def test_train_loop_with_checkpointing(tmp_path):
+    loop = _loop(tmp_path)
+    with loop.mesh:
+        res = loop.run_loop()
+    assert res.final_step == 6
+    assert len(res.losses) == 6
+    assert loop.ckpt.latest_step() == 6
+
+
+def test_train_loop_resume(tmp_path):
+    loop = _loop(tmp_path, steps=4)
+    with loop.mesh:
+        loop.run_loop()
+    loop2 = _loop(tmp_path, steps=4)
+    with loop2.mesh:
+        res = loop2.run_loop(resume=True)
+    assert res.final_step == 4       # resumed at 4, nothing left to do
+    assert res.losses == []

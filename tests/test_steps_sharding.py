@@ -1,0 +1,136 @@
+"""Distribution glue: spec fixing, FSDP rewrite, step builders (local mesh)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.config import MeshConfig, OptimizerConfig, RunConfig
+from repro.configs import SMOKES
+from repro.configs.shapes import SMOKE_DECODE, SMOKE_PREFILL, SMOKE_TRAIN
+from repro.launch.mesh import make_local_mesh
+from repro.runtime.steps import (_apply_fsdp, _filter_axes,
+                                 _fix_divisibility, make_serve_step,
+                                 make_train_step)
+
+
+def _fake_mesh(shape, axes):
+    """Axis-size stand-in with mesh-like .shape/.axis_names (no devices)."""
+    class M:
+        pass
+    m = M()
+    m.axis_names = axes
+    m.shape = dict(zip(axes, shape))
+    return m
+
+
+def test_fix_divisibility_moves_axis():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    spec = {"k": P(None, "data", None, "model", None)}
+    struct = {"k": jax.ShapeDtypeStruct((30, 128, 64, 8, 128), np.float32)}
+    fixed = _fix_divisibility(spec, struct, mesh)
+    # kv=8 not divisible by model=16 -> relocated to head_dim (128)
+    assert fixed["k"] == P(None, "data", None, None, "model")
+
+
+def test_fix_divisibility_drops_when_stuck():
+    mesh = _fake_mesh((16,), ("data",))
+    spec = {"x": P("data",)}
+    struct = {"x": jax.ShapeDtypeStruct((1,), np.float32)}
+    fixed = _fix_divisibility(spec, struct, mesh)
+    assert fixed["x"] == P(None,)
+
+
+def test_filter_axes_removes_missing_mesh_axes():
+    mesh = _fake_mesh((4, 2), ("data", "model"))
+    spec = {"t": P(("pod", "data"), None)}
+    assert _filter_axes(spec, mesh)["t"] == P(("data",), None)
+
+
+def test_apply_fsdp_targets_feature_dims_not_scan_dim():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    specs = {"embed": P("model", None),
+             "moe_layers": {"ffn": {"gate": P(None, None, None, "model")}}}
+    structs = {"embed": jax.ShapeDtypeStruct((64000, 7168), np.float32),
+               "moe_layers": {"ffn": {"gate": jax.ShapeDtypeStruct(
+                   (64, 8, 6144, 32768), np.float32)}}}
+    out = _apply_fsdp(specs, structs, mesh)
+    # scan dim 0 untouched; E=8 skipped (8 % 16); d=6144 gets the axis
+    assert out["moe_layers"]["ffn"]["gate"] == P(None, None, "data", "model")
+    assert out["embed"] == P("model", None)     # non-stacked untouched
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "deepseek-v3-671b"])
+def test_train_step_runs_local(arch):
+    mesh = make_local_mesh()
+    run = RunConfig(model=SMOKES[arch], shape=SMOKE_TRAIN,
+                    mesh=MeshConfig(shape=(1, 1), axes=("data", "model")),
+                    optimizer=OptimizerConfig(lr=1e-3, total_steps=10),
+                    microbatches=2)
+    with mesh:
+        ts = make_train_step(run, mesh)
+        params, opt_state, ef = ts.init_state(jax.random.PRNGKey(0))
+        batch = {
+            k: jnp.zeros(v.shape, v.dtype)
+            for k, v in ts.input_structs.items()
+        }
+        if "tokens" in batch:
+            batch["tokens"] = jnp.ones(batch["tokens"].shape, jnp.int32)
+        params, opt_state, ef, m = ts.step(params, opt_state, ef, batch)
+        assert np.isfinite(float(m["loss"]))
+
+
+def test_train_step_microbatch_structs_shape():
+    mesh = make_local_mesh()
+    run = RunConfig(model=SMOKES["granite-3-2b"], shape=SMOKE_TRAIN,
+                    mesh=MeshConfig(shape=(1, 1), axes=("data", "model")),
+                    microbatches=2)
+    with mesh:
+        ts = make_train_step(run, mesh)
+    t = ts.input_structs["tokens"]
+    assert t.shape[0] == 2                      # [micro, B/micro, S]
+    assert t.shape[1] == SMOKE_TRAIN.global_batch // 2
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "zamba2-7b"])
+def test_serve_steps_run_local(arch):
+    mesh = make_local_mesh()
+    run = RunConfig(model=SMOKES[arch], shape=SMOKE_PREFILL,
+                    mesh=MeshConfig(shape=(1, 1), axes=("data", "model")))
+    with mesh:
+        ss = make_serve_step(run, mesh, decode_write=False)
+        params = jax.jit(ss.model.init_params,
+                         out_shardings=ss.param_shardings)(
+            jax.random.PRNGKey(0))
+        batch = {k: (jnp.ones(v.shape, v.dtype) if v.dtype == np.int32
+                     else jnp.zeros(v.shape, v.dtype))
+                 for k, v in ss.input_structs.items()}
+        logits, cache = ss.prefill(params, batch)
+        assert np.isfinite(np.asarray(logits, np.float32)
+                           [:, :run.model.vocab]).all()
+        toks = jnp.ones((SMOKE_PREFILL.global_batch, 1), jnp.int32)
+        logits2, _ = ss.decode(params, cache, toks)
+        assert np.isfinite(np.asarray(logits2, np.float32)
+                           [:, :run.model.vocab]).all()
+
+
+def test_compressed_train_step_learns():
+    mesh = make_local_mesh()
+    run = RunConfig(model=SMOKES["granite-3-2b"], shape=SMOKE_TRAIN,
+                    mesh=MeshConfig(shape=(1, 1), axes=("data", "model")),
+                    optimizer=OptimizerConfig(lr=1e-2, warmup_steps=0,
+                                              total_steps=100,
+                                              compress_grads=True))
+    from repro.data.pipeline import TokenPipeline
+    with mesh:
+        ts = make_train_step(run, mesh)
+        params, opt, ef = ts.init_state(jax.random.PRNGKey(0))
+        assert ef is not None
+        pipe = TokenPipeline(run.model, run.shape)
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()}
+        losses = []
+        for _ in range(15):
+            params, opt, ef, m = ts.step(params, opt, ef, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 1.0     # overfits the fixed batch

@@ -10,8 +10,10 @@ the modeled numbers, where aggregate bandwidth is the variable.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable, List
+from typing import Any, Callable, Dict, List
 
 import jax
 import numpy as np
@@ -51,3 +53,28 @@ def _fmt(v) -> str:
     if isinstance(v, float):
         return f"{v:.6g}"
     return str(v)
+
+
+def percentile(xs: List[float], p: float) -> float:
+    """p-th percentile of a latency sample (p in [0, 100])."""
+    return float(np.percentile(np.asarray(xs, np.float64), p)) if xs else 0.0
+
+
+def record_json(path: str, payload: Dict[str, Any], *,
+                label: str = "measured-cpu") -> str:
+    """Persist a benchmark record so future PRs have a perf trajectory.
+
+    Every record carries the measurement label (``measured-cpu`` /
+    ``modeled-v5e`` — see module docstring) and the device platform, so a
+    number from this container is never confused with a TPU number.
+    """
+    record = {
+        "label": label,
+        "platform": jax.devices()[0].platform,
+        "device_count": jax.device_count(),
+        **payload,
+    }
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return os.path.abspath(path)

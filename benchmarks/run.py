@@ -11,7 +11,8 @@ import argparse
 import sys
 import time
 
-BENCHES = ["fig3", "fig9", "fig10_table1", "fig11", "fig12", "kernels"]
+BENCHES = ["fig3", "fig9", "fig10_table1", "fig11", "fig12", "kernels",
+           "serving"]
 
 
 def main(argv=None) -> int:

@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Fast CI gate: byte-compile every tree we ship, then run the fast test
+# tier (pytest.ini defaults to -m "not slow"). The slow tier (system /
+# sharding / compile-heavy) runs out-of-band:  pytest -m slow
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m compileall -q src benchmarks examples scripts tests
+python -m pytest -q

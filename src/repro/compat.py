@@ -1,0 +1,25 @@
+"""Version compatibility shims for the JAX API surface this repo uses.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+and renamed its replication-check kwarg (``check_rep`` -> ``check_vma``)
+across the JAX versions this repo supports. Route every call through here.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+try:  # newest API: top-level jax.shard_map with check_vma
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any,
+              check_vma: bool = True) -> Callable:
+    kwargs = {_CHECK_KW: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

@@ -266,6 +266,34 @@ def stack_keys(keys) -> DPFKey:
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *keys)
 
 
+def n_queries_of(keys: DPFKey) -> int:
+    """Leading (query) axis length of a batched key pytree."""
+    return int(keys.root_seed.shape[0])
+
+
+def pad_keys(keys: DPFKey, n_total: int) -> DPFKey:
+    """Pad a batched key pytree to ``n_total`` queries along the batch axis.
+
+    Pad slots replicate the last real key: every padded slot is a *valid*
+    DPF key, so the serve step evaluates it like any other query and the
+    extra answers are simply discarded by the caller (DESIGN.md §6 padding
+    rule). Because each query's answer is an independent vmap lane, padding
+    can never corrupt the real answers.
+    """
+    q = n_queries_of(keys)
+    if n_total < q:
+        raise ValueError(f"cannot pad {q} queries down to {n_total}")
+    if n_total == q:
+        return keys
+    pad = n_total - q
+
+    def pad_leaf(leaf):
+        reps = (pad,) + (1,) * (leaf.ndim - 1)
+        return jnp.concatenate([leaf, jnp.tile(leaf[-1:], reps)], axis=0)
+
+    return jax.tree_util.tree_map(pad_leaf, keys)
+
+
 @partial(jax.jit, static_argnames=("log_range",))
 def eval_bytes_batch(keys: DPFKey, start_block, log_range: int) -> jax.Array:
     """vmap'd Z_256 additive shares: ``[Q, 2^log_range] int8``-compatible u8."""

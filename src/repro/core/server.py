@@ -38,9 +38,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.config import PIRConfig
 from repro.core import dpf
 from repro.core.pir import dpxor, xor_fold
+from repro.crypto.chacha import PRG_ROUNDS
 
 U32 = jnp.uint32
 
@@ -61,15 +63,21 @@ def _axis_size(mesh, names) -> int:
     return n
 
 
-def key_specs(cfg: PIRConfig, n_queries: int) -> dpf.DPFKey:
-    """ShapeDtypeStruct stand-ins for a batched key pytree (dry-run input)."""
+def key_specs(cfg: PIRConfig, n_queries: int, *, party: int = 0
+              ) -> dpf.DPFKey:
+    """ShapeDtypeStruct stand-ins for a batched key pytree (dry-run input).
+
+    ``party`` and the PRG round count are pytree *aux data*, so they must
+    match the real keys exactly for treedef-sensitive uses (e.g. the
+    per-bucket ``jit`` in_shardings).
+    """
     log_n = cfg.log_n
     mk = lambda *s: jax.ShapeDtypeStruct((n_queries,) + s, np.uint32)
     cw_final = None if cfg.mode == "xor" else mk(1)
     return dpf.DPFKey(
-        party=0, log_n=log_n,
+        party=party, log_n=log_n,
         root_seed=mk(4), cw_seed=mk(log_n, 4), cw_t=mk(log_n, 2),
-        cw_final=cw_final, rounds=12,
+        cw_final=cw_final, rounds=PRG_ROUNDS.get(cfg.prf, 12),
     )
 
 
@@ -112,6 +120,8 @@ class ServeFns:
     db_sharding: NamedSharding
     cfg: PIRConfig
     n_local_queries: int       # queries per cluster per step
+    # batched-key pytree -> NamedSharding pytree (for async host staging)
+    key_shardings: Optional[Callable] = None
 
 
 def build_serve_fn(
@@ -197,12 +207,18 @@ def build_serve_fn(
 
     def serve(db, keys):
         ks = keys_spec_builder(keys)
-        fn = jax.shard_map(
+        fn = shard_map(
             local_step, mesh=mesh,
             in_specs=(db_spec, ks), out_specs=out_spec,
             check_vma=False,
         )
         return fn(db, keys)
+
+    def key_shardings(keys_like: dpf.DPFKey):
+        """NamedSharding pytree for a batched key pytree (host staging)."""
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), _key_pspec(keys_like, cluster),
+            is_leaf=lambda x: isinstance(x, P))
 
     return ServeFns(
         serve=serve,
@@ -210,6 +226,7 @@ def build_serve_fn(
         db_sharding=NamedSharding(mesh, db_spec),
         cfg=cfg,
         n_local_queries=n_queries // max(n_clusters, 1),
+        key_shardings=key_shardings,
     )
 
 
@@ -219,10 +236,126 @@ def _words_to_bytes_i8(w: jax.Array) -> jax.Array:
     return b.reshape(w.shape[:-1] + (w.shape[-1] * 4,)).astype(jnp.int8)
 
 
+def bucket_for(buckets: Sequence[int], n: int) -> int:
+    """The padding rule (DESIGN.md §6): smallest bucket >= n.
+
+    Returns the largest bucket when n exceeds it — the caller then chunks
+    (``PIRServer.answer``) or cuts batches no larger than it (the
+    scheduler). ``buckets`` must be sorted ascending.
+    """
+    for b in buckets:
+        if b >= n:
+            return b
+    return buckets[-1]
+
+
+def default_buckets(n_clusters: int = 1, max_bucket: int = 32
+                    ) -> Tuple[int, ...]:
+    """Power-of-two batch buckets, each divisible by the cluster count.
+
+    The serve step shards the query batch over clusters, so every compiled
+    batch size must be a multiple of ``n_clusters``; buckets are the
+    doubling ladder from ``n_clusters`` up to ``max_bucket`` (DESIGN.md §6).
+    """
+    n_clusters = max(n_clusters, 1)
+    b = n_clusters
+    out = []
+    while b <= max(max_bucket, n_clusters):
+        out.append(b)
+        b *= 2
+    return tuple(out)
+
+
+class BucketedServeFns:
+    """Lower-once-per-bucket cache of compiled serve steps for one party.
+
+    Ragged traffic never recompiles: a batch of Q queries is padded up to
+    the smallest bucket >= Q (``dpf.pad_keys``) and answered by that
+    bucket's cached ``jax.jit`` step. ``n_compiles`` counts cache misses so
+    tests/benches can assert reuse.
+    """
+
+    def __init__(self, cfg: PIRConfig, mesh: jax.sharding.Mesh, *,
+                 buckets: Sequence[int], path: str = "baseline",
+                 collective: str = "gather", party: int = 0):
+        n_clusters = _axis_size(mesh, _cluster_axes(mesh))
+        for b in buckets:
+            if b % max(n_clusters, 1):
+                raise ValueError(
+                    f"bucket {b} not divisible by {n_clusters} clusters")
+        self.cfg = cfg
+        self.mesh = mesh
+        self.path = path
+        self.collective = collective
+        self.party = party
+        self.buckets = tuple(sorted(set(buckets)))
+        self.n_compiles = 0
+        self._cache: dict = {}   # bucket -> (ServeFns, jitted serve)
+
+    def bucket_for(self, n: int) -> int:
+        return bucket_for(self.buckets, n)
+
+    def fns_for(self, bucket: int) -> Tuple[ServeFns, Callable]:
+        if bucket not in self._cache:
+            fns = build_serve_fn(self.cfg, self.mesh, n_queries=bucket,
+                                 path=self.path, collective=self.collective)
+            # explicit in_shardings: host-resident and pre-staged
+            # (device_put) key batches hit the SAME executable — without
+            # this, staging would silently fork a second ~identical
+            # compile per bucket (observed +70 s on the dev container)
+            keys_like = key_specs(self.cfg, bucket, party=self.party)
+            in_sh = (fns.db_sharding, fns.key_shardings(keys_like))
+            self._cache[bucket] = (fns, jax.jit(fns.serve, in_shardings=in_sh))
+            self.n_compiles += 1
+        return self._cache[bucket]
+
+    def stage(self, keys: dpf.DPFKey) -> dpf.DPFKey:
+        """Pad a batched key pytree to its bucket and device_put it.
+
+        This is the host-side half of the double-buffered serve pipeline:
+        staging batch k+1's keys overlaps batch k's device compute.
+        Batches larger than the largest bucket pass through unstaged —
+        ``answer`` chunks (and pads per chunk) at dispatch.
+        """
+        if dpf.n_queries_of(keys) > self.buckets[-1]:
+            return keys
+        bucket = self.bucket_for(dpf.n_queries_of(keys))
+        fns, _ = self.fns_for(bucket)
+        padded = dpf.pad_keys(keys, bucket)
+        if fns.key_shardings is not None:
+            padded = jax.device_put(padded, fns.key_shardings(padded))
+        return padded
+
+    def answer(self, db: jax.Array, keys: dpf.DPFKey) -> jax.Array:
+        """Answer a batch of any size; returns exactly [Q, W] shares.
+
+        Q pads up to its bucket (pad answers computed and sliced off);
+        batches beyond the largest bucket are chunked. The result is
+        asynchronous (no block until the caller consumes it).
+        """
+        q = dpf.n_queries_of(keys)
+        max_b = self.buckets[-1]
+        if q <= max_b:
+            return self._answer_one(db, keys)
+        chunks = []
+        for lo in range(0, q, max_b):
+            hi = min(lo + max_b, q)
+            part = jax.tree_util.tree_map(lambda x: x[lo:hi], keys)
+            chunks.append(self._answer_one(db, part))
+        return jnp.concatenate(chunks, axis=0)
+
+    def _answer_one(self, db: jax.Array, keys: dpf.DPFKey) -> jax.Array:
+        q = dpf.n_queries_of(keys)
+        bucket = self.bucket_for(q)
+        _, jitted = self.fns_for(bucket)
+        return jitted(db, dpf.pad_keys(keys, bucket))[:q]
+
+
 class PIRServer:
     """One logical PIR server (one of the n non-colluding parties).
 
-    Owns the device-resident DB shards and a compiled serve step. The DB is
+    Owns the device-resident DB shards and a *family* of compiled serve
+    steps, one per batch bucket (lower-once-per-bucket). The DB is
     preloaded once (paper §3.3 "database preloading": transfer cost excluded
     from query latency) and donated to devices.
     """
@@ -237,20 +370,45 @@ class PIRServer:
         n_queries: int = 32,
         path: str = "baseline",
         collective: str = "gather",
+        buckets: Optional[Sequence[int]] = None,
     ):
         self.party = party
         self.cfg = cfg
         self.mesh = mesh
         self.path = path
-        self.fns = build_serve_fn(
-            cfg, mesh, n_queries=n_queries, path=path, collective=collective
-        )
+        n_clusters = _axis_size(mesh, _cluster_axes(mesh))
+        if buckets is None:
+            buckets = default_buckets(n_clusters,
+                                      max_bucket=max(n_queries, 1))
+        if n_queries not in buckets:
+            buckets = tuple(sorted(set(buckets) | {n_queries}))
+        self.bucketed = BucketedServeFns(
+            cfg, mesh, buckets=buckets, path=path, collective=collective,
+            party=party)
+        self.n_queries = n_queries
+        self.fns = self.bucketed.fns_for(n_queries)[0]
         self.db = jax.device_put(jnp.asarray(db_words), self.fns.db_sharding)
-        self._jitted = jax.jit(self.fns.serve)
+
+    @property
+    def n_compiles(self) -> int:
+        return self.bucketed.n_compiles
+
+    @property
+    def buckets(self) -> Tuple[int, ...]:
+        return self.bucketed.buckets
+
+    def stage_keys(self, keys: dpf.DPFKey) -> dpf.DPFKey:
+        """Pad + device_put a key batch ahead of dispatch (pipelining)."""
+        return self.bucketed.stage(keys)
 
     def answer(self, keys: dpf.DPFKey) -> jax.Array:
-        """Answer a batch of queries (keys stacked on the leading axis)."""
-        return self._jitted(self.db, keys)
+        """Answer a batch of queries (keys stacked on the leading axis).
+
+        Any batch size works: Q is padded up to its bucket (answers for pad
+        slots are computed and discarded) and batches beyond the largest
+        bucket are chunked. Returns exactly [Q, W] answer shares.
+        """
+        return self.bucketed.answer(self.db, keys)
 
     def lower(self, n_queries: int):
         """Lower (no execution) against ShapeDtypeStructs — dry-run entry."""
@@ -258,4 +416,5 @@ class PIRServer:
         db_spec = jax.ShapeDtypeStruct(
             (self.cfg.n_items, self.cfg.item_bytes // 4), np.uint32
         )
-        return jax.jit(self.fns.serve).lower(db_spec, keys)
+        fns = self.bucketed.fns_for(self.bucketed.bucket_for(n_queries))[0]
+        return jax.jit(fns.serve).lower(db_spec, keys)

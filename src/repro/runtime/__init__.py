@@ -1,2 +1,3 @@
-from repro.runtime.steps import make_serve_step, make_train_step
-__all__ = ["make_serve_step", "make_train_step"]
+from repro.runtime.steps import (make_pir_serve_step, make_serve_step,
+                                 make_train_step)
+__all__ = ["make_pir_serve_step", "make_serve_step", "make_train_step"]

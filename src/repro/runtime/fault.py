@@ -12,16 +12,17 @@ the policy layer implemented here:
 * ``PoisonPolicy`` — NaN/Inf loss ⇒ skip the update (params unchanged),
   rewind to the last good checkpoint after ``max_consecutive`` poisons.
 * ``StragglerMonitor`` — EWMA of step latency per participant; an entry
-  ``factor``× slower than the median is flagged; the serve loop re-shards a
-  flagged cluster's queue to healthy clusters, the train loop surfaces the
-  flag to the scheduler (backup-worker dispatch).
+  ``factor``× slower than the median is flagged; the serve scheduler
+  (``runtime.serve_loop.QueryScheduler``) re-shards a flagged cluster's
+  queue to healthy clusters via ``shed_stragglers``, the train loop
+  surfaces the flag to the scheduler (backup-worker dispatch).
 """
 from __future__ import annotations
 
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -98,15 +99,28 @@ class StragglerMonitor:
 
     def reassign(self, queues: Dict[str, list]) -> Dict[str, list]:
         """Move a straggler's queued work to the fastest healthy peers."""
+        return self.shed_stragglers(queues)[0]
+
+    def shed_stragglers(self, queues: Dict[str, list]
+                        ) -> "Tuple[Dict[str, list], int]":
+        """``reassign`` plus the number of items moved.
+
+        The serve scheduler uses the count to account reassignments in its
+        stats and to decide whether a re-balance pass did anything.
+        """
         slow = set(self.stragglers())
-        if not slow or len(slow) == len(queues):
-            return queues
+        # donors: flagged lanes with queued work; receivers must exclude
+        # EVERY flagged lane (an idle straggler is still slow — shedding
+        # work onto it would re-create the problem)
+        donors = [p for p in slow if queues.get(p)]
         fast = [p for p in queues if p not in slow]
+        if not donors or not fast:
+            return queues, 0
         out = {p: list(q) for p, q in queues.items()}
         moved = []
-        for p in slow:
+        for p in donors:
             moved.extend(out[p])
             out[p] = []
         for i, item in enumerate(moved):
             out[fast[i % len(fast)]].append(item)
-        return out
+        return out, len(moved)

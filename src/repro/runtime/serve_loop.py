@@ -1,48 +1,376 @@
 """PIR serving runtime — the paper's Figure 8 multi-query workflow.
 
 Pipeline stages (paper §3.4):
-  ① client keys arrive (batch of DPF key pairs)        -> task queue
-  ② worker threads run DPF evaluation                  (paper: host CPU;
-     here it's fused into the device step — see core/server.py — so the
-     "worker" stage just stages key pytrees onto devices)
-  ③ scheduler assigns queries to DPU *clusters*        (mesh data-axis
-     groups, each holding a full DB replica sharded over `model`)
-  ④ clusters run dpXOR, subresults aggregate over the shard axis
-  ⑤ answers return to the client
+  ① client keys arrive (streaming per-client queries)   -> pending queue
+  ② the scheduler coalesces them into *padded batches* drawn from a small
+     set of bucket sizes, each bucket backed by a cached compiled serve
+     step (core/server.BucketedServeFns) so ragged traffic never
+     recompiles (DESIGN.md §6)
+  ③ batches are assigned to DPU *clusters* (mesh data-axis groups, each
+     holding a full DB replica sharded over `model`) round-robin
+  ④ a double-buffered dispatch loop stages batch k+1's key pytree onto
+     devices while batch k executes (host staging ∥ device compute)
+  ⑤ answers return to the client through per-query futures; the two
+     parties' shares are reconciled off the dispatch critical path
 
 Straggler mitigation: per-cluster latency EWMA; a flagged cluster's queued
-work is re-sharded onto healthy clusters (``StragglerMonitor.reassign``) —
-the clustered replica topology is exactly what makes this cheap (paper
-Take-away 5's structure, used for fault tolerance too).
+work is re-sharded onto healthy clusters (``StragglerMonitor.shed_stragglers``,
+wired into ``QueryScheduler.rebalance``) — the clustered replica topology is
+exactly what makes this cheap (paper Take-away 5's structure, used for fault
+tolerance too).
 """
 from __future__ import annotations
 
 import queue
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
 from repro.config import PIRConfig
 from repro.core import dpf, pir
-from repro.core.server import PIRServer
+from repro.core.server import PIRServer, bucket_for
 from repro.runtime.fault import StragglerMonitor
+
+#: dispatch-queue depth of the double-buffered loop: one batch executing on
+#: device, one being staged on the host. Deeper pipelines only add latency.
+PIPELINE_DEPTH = 2
+
+#: default batching window — how long a lone query may wait for companions
+#: before the scheduler cuts an under-full (padded) batch.
+DEFAULT_MAX_WAIT_S = 0.005
 
 
 @dataclass
 class ServeStats:
     answered: int = 0
     batches: int = 0
-    reassignments: int = 0
+    padded: int = 0              # pad slots computed-and-discarded
+    reassignments: int = 0       # queued batches moved off stragglers
     latencies: List[float] = field(default_factory=list)
+    bucket_counts: Dict[int, int] = field(default_factory=dict)
+    # serving window: earliest dispatch .. latest completion. Overlapped
+    # (pipelined) batches make sum(latencies) exceed wall time, so QPS is
+    # computed against this window, never against the latency sum.
+    t_first: Optional[float] = None
+    t_last: Optional[float] = None
+
+    def observe_window(self, t0: float, t1: float):
+        self.t_first = t0 if self.t_first is None else min(self.t_first, t0)
+        self.t_last = t1 if self.t_last is None else max(self.t_last, t1)
+
+    @property
+    def wall_s(self) -> float:
+        if self.t_first is None or self.t_last is None:
+            return 0.0
+        return self.t_last - self.t_first
 
     @property
     def qps(self) -> float:
-        total = sum(self.latencies)
-        return self.answered / total if total else 0.0
+        wall = self.wall_s
+        return self.answered / wall if wall > 0 else 0.0
+
+    @property
+    def pad_fraction(self) -> float:
+        slots = self.answered + self.padded
+        return self.padded / slots if slots else 0.0
+
+
+class AnswerFuture:
+    """Per-query result handle: ``submit(index) -> future`` (DESIGN.md §6).
+
+    Thread-safe; ``result()`` blocks until the scheduler completes the
+    batch carrying this query (or re-raises the batch's failure).
+    """
+
+    def __init__(self):
+        self._ev = threading.Event()
+        self._value: Any = None
+        self._exc: Optional[BaseException] = None
+
+    def set_result(self, value: Any):
+        self._value = value
+        self._ev.set()
+
+    def set_exception(self, exc: BaseException):
+        self._exc = exc
+        self._ev.set()
+
+    def done(self) -> bool:
+        return self._ev.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        if not self._ev.wait(timeout):
+            raise TimeoutError("answer not ready")
+        if self._exc is not None:
+            raise self._exc
+        return self._value
+
+
+@dataclass
+class _Batch:
+    """One formed (not yet padded) batch bound for a cluster lane."""
+    items: List[Any]                  # raw per-query payloads
+    futures: List[AnswerFuture]
+    cluster: str
+    payload: Any = None               # collated (stacked) keys
+    staged: Any = None                # padded + device_put keys
+    bucket: int = 0
+
+
+class QueryScheduler:
+    """Dynamic batcher + double-buffered dispatcher over cluster lanes.
+
+    Parameterized by four callables so the same engine serves one party
+    (share answering) or a two-party deployment (XOR reconciliation):
+
+      collate(items)        stack raw per-query payloads -> batched pytree
+      stage(payload)        pad to bucket + device_put (overlaps compute)
+      dispatch(staged)      launch the compiled serve step (async, no block)
+      finalize(raw, n)      block + convert the first n real answers
+
+    Queries arrive via :meth:`submit` (returns an :class:`AnswerFuture`).
+    Batches are cut when a full bucket's worth is pending, or when the
+    oldest query has waited ``max_wait_s`` (then padded up to the smallest
+    covering bucket). Work is spread round-robin over ``n_clusters``
+    logical lanes; :meth:`rebalance` sheds a flagged straggler's queued
+    batches onto healthy lanes.
+
+    Drive it synchronously with :meth:`pump` (tests, benches) or as a
+    background session with :meth:`start` / :meth:`stop`.
+    """
+
+    def __init__(
+        self,
+        *,
+        collate: Callable[[List[Any]], Any],
+        stage: Callable[[Any], Any],
+        dispatch: Callable[[Any], Any],
+        finalize: Callable[[Any, int], Sequence[Any]],
+        buckets: Sequence[int],
+        n_clusters: int = 1,
+        max_wait_s: float = DEFAULT_MAX_WAIT_S,
+        monitor: Optional[StragglerMonitor] = None,
+        depth: int = PIPELINE_DEPTH,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self._collate = collate
+        self._stage = stage
+        self._dispatch = dispatch
+        self._finalize = finalize
+        self.buckets = tuple(sorted(set(buckets)))
+        self.n_clusters = max(n_clusters, 1)
+        self.max_wait_s = max_wait_s
+        self.monitor = monitor if monitor is not None else StragglerMonitor()
+        self.depth = max(depth, 1)
+        self.clock = clock
+        self.stats = ServeStats()
+
+        self._cv = threading.Condition()
+        self._pending: deque = deque()        # (item, future, t_submit)
+        self.queues: Dict[str, List[_Batch]] = {
+            f"cluster{i}": [] for i in range(self.n_clusters)}
+        self._rr = 0                          # round-robin lane counter
+        self._thread: Optional[threading.Thread] = None
+        self._stopping = False
+
+    # ------------------------------------------------------------------
+    # intake
+    # ------------------------------------------------------------------
+
+    def submit(self, item: Any) -> AnswerFuture:
+        """Enqueue one query payload; returns its future."""
+        fut = AnswerFuture()
+        with self._cv:
+            self._pending.append((item, fut, self.clock()))
+            if len(self._pending) >= self.buckets[-1]:
+                self._cut_locked(self.buckets[-1])
+            self._cv.notify()
+        return fut
+
+    def flush(self):
+        """Cut every pending query into batches now (end-of-stream)."""
+        with self._cv:
+            while self._pending:
+                self._cut_locked(min(len(self._pending), self.buckets[-1]))
+            self._cv.notify()
+
+    def bucket_for(self, n: int) -> int:
+        return bucket_for(self.buckets, n)
+
+    def _cut_locked(self, n: int):
+        """Form one batch of ``n`` pending queries onto the next lane."""
+        taken = [self._pending.popleft() for _ in range(n)]
+        lane = f"cluster{self._rr % self.n_clusters}"
+        self._rr += 1
+        batch = _Batch(items=[t[0] for t in taken],
+                       futures=[t[1] for t in taken],
+                       cluster=lane)
+        batch.bucket = self.bucket_for(n)
+        self.queues[lane].append(batch)
+
+    def _cut_ripe_locked(self) -> bool:
+        """Cut under-full batches whose oldest query aged past max_wait_s."""
+        cut = False
+        while self._pending and \
+                self.clock() - self._pending[0][2] >= self.max_wait_s:
+            self._cut_locked(min(len(self._pending), self.buckets[-1]))
+            cut = True
+        return cut
+
+    # ------------------------------------------------------------------
+    # straggler shedding
+    # ------------------------------------------------------------------
+
+    def rebalance(self) -> int:
+        """Move queued batches off flagged straggler lanes; returns moved."""
+        with self._cv:
+            new_queues, moved = self.monitor.shed_stragglers(self.queues)
+            if moved:
+                for lane, b_list in new_queues.items():
+                    for b in b_list:
+                        b.cluster = lane
+                self.queues = new_queues
+                self.stats.reassignments += moved
+        return moved
+
+    def _pop_batch_locked(self) -> Optional[_Batch]:
+        for i in range(self.n_clusters):
+            lane = f"cluster{(self._rr + i) % self.n_clusters}"
+            if self.queues[lane]:
+                return self.queues[lane].pop(0)
+        return None
+
+    # ------------------------------------------------------------------
+    # dispatch engine
+    # ------------------------------------------------------------------
+
+    def _launch(self, batch: _Batch) -> Tuple[_Batch, Any, float]:
+        """Collate + stage + dispatch one batch (device runs async)."""
+        batch.payload = self._collate(batch.items)
+        batch.staged = self._stage(batch.payload)
+        t0 = self.clock()
+        raw = self._dispatch(batch.staged)
+        return batch, raw, t0
+
+    def _complete(self, batch: _Batch, raw: Any, t0: float):
+        try:
+            answers = self._finalize(raw, len(batch.items))
+            dt = self.clock() - t0
+            for fut, ans in zip(batch.futures, answers):
+                fut.set_result(ans)
+        except BaseException as e:       # propagate to the waiting clients
+            for fut in batch.futures:
+                fut.set_exception(e)
+            raise
+        self.monitor.record(batch.cluster, dt)
+        self.stats.observe_window(t0, t0 + dt)
+        self.stats.latencies.append(dt)
+        self.stats.batches += 1
+        self.stats.answered += len(batch.items)
+        self.stats.padded += batch.bucket - len(batch.items)
+        self.stats.bucket_counts[batch.bucket] = \
+            self.stats.bucket_counts.get(batch.bucket, 0) + 1
+        self.rebalance()
+
+    def pump(self) -> int:
+        """Synchronously drain all pending + queued work, double-buffered.
+
+        Stages/dispatches batch k+1 before blocking on batch k, so host-side
+        key staging overlaps device compute. Returns #queries answered.
+        """
+        self.flush()
+        answered0 = self.stats.answered
+        inflight: deque = deque()
+        while True:
+            with self._cv:
+                batch = self._pop_batch_locked()
+            if batch is None and not inflight:
+                break
+            if batch is not None:
+                inflight.append(self._launch(batch))
+            while inflight and (len(inflight) >= self.depth
+                                or batch is None):
+                self._complete(*inflight.popleft())
+        return self.stats.answered - answered0
+
+    # ------------------------------------------------------------------
+    # background session mode
+    # ------------------------------------------------------------------
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self):
+        if self.running:
+            return
+        self._stopping = False
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="pir-scheduler")
+        self._thread.start()
+
+    def stop(self):
+        """Flush, answer everything in flight, then join the thread."""
+        if not self.running:
+            return
+        with self._cv:
+            self._stopping = True
+            self._cv.notify()
+        self._thread.join()
+        self._thread = None
+
+    def _run(self):
+        inflight: deque = deque()
+        try:
+            while True:
+                batch = None
+                with self._cv:
+                    self._cut_ripe_locked()
+                    if self._stopping:
+                        while self._pending:
+                            self._cut_locked(
+                                min(len(self._pending), self.buckets[-1]))
+                    if len(inflight) < self.depth:
+                        batch = self._pop_batch_locked()
+                    if (batch is None and not inflight and not self._pending
+                            and self._stopping):
+                        return
+                    if batch is None and not inflight:
+                        # idle: sleep until a submit arrives or one ripens
+                        wait = self.max_wait_s
+                        if self._pending:
+                            age = self.clock() - self._pending[0][2]
+                            wait = max(self.max_wait_s - age, 0.0)
+                        self._cv.wait(timeout=wait if self._pending else None)
+                        continue
+                if batch is not None:
+                    inflight.append(self._launch(batch))
+                    continue  # keep the pipeline full before blocking
+                self._complete(*inflight.popleft())
+        except BaseException as e:
+            # the session is dead: every outstanding future must resolve,
+            # not hang its client until result() times out
+            self._fail_outstanding(inflight, e)
+
+    def _fail_outstanding(self, inflight, exc: BaseException):
+        for batch, _, _ in inflight:
+            for fut in batch.futures:
+                if not fut.done():
+                    fut.set_exception(exc)
+        with self._cv:
+            for lane in self.queues.values():
+                for batch in lane:
+                    for fut in batch.futures:
+                        fut.set_exception(exc)
+                lane.clear()
+            while self._pending:
+                _, fut, _ = self._pending.popleft()
+                fut.set_exception(exc)
 
 
 class PIRServeLoop:
@@ -60,20 +388,52 @@ class PIRServeLoop:
         self.task_q.put(keys)
 
     def drain(self) -> List[jax.Array]:
-        """Answer every queued batch; returns per-batch answer shares."""
+        """Serial baseline: answer every queued batch, blocking per batch.
+
+        Kept as the §Perf comparison point for :meth:`drain_pipelined` —
+        this is the paper's strictly synchronous Figure 8 loop.
+        """
         out = []
         while not self.task_q.empty():
             keys = self.task_q.get()
             t0 = time.monotonic()
             ans = self.server.answer(keys)
             ans.block_until_ready()
-            dt = time.monotonic() - t0
-            self.stats.latencies.append(dt)
-            self.stats.batches += 1
-            self.stats.answered += keys.root_seed.shape[0]
-            self.straggler.record(f"cluster{self.stats.batches % max(self.n_clusters, 1)}", dt)
+            self._record(keys, t0, time.monotonic() - t0)
             out.append(ans)
         return out
+
+    def drain_pipelined(self, depth: int = PIPELINE_DEPTH) -> List[jax.Array]:
+        """Double-buffered drain: stage batch k+1 while batch k executes.
+
+        Same answers as :meth:`drain` — staged batches are padded to their
+        bucket, so the pad rows are sliced back off here; the
+        ``block_until_ready`` bubble is overlapped with the next batch's
+        host-side staging + dispatch.
+        """
+        out: List[jax.Array] = []
+        inflight: deque = deque()
+        while not self.task_q.empty() or inflight:
+            if not self.task_q.empty() and len(inflight) < depth:
+                keys = self.task_q.get()
+                staged = self.server.stage_keys(keys)
+                t0 = time.monotonic()
+                inflight.append((keys, self.server.answer(staged), t0))
+                continue
+            keys, ans, t0 = inflight.popleft()
+            ans = ans[: dpf.n_queries_of(keys)]      # drop pad-slot answers
+            ans.block_until_ready()
+            self._record(keys, t0, time.monotonic() - t0)
+            out.append(ans)
+        return out
+
+    def _record(self, keys: dpf.DPFKey, t0: float, dt: float):
+        self.stats.observe_window(t0, t0 + dt)
+        self.stats.latencies.append(dt)
+        self.stats.batches += 1
+        self.stats.answered += dpf.n_queries_of(keys)
+        self.straggler.record(
+            f"cluster{self.stats.batches % max(self.n_clusters, 1)}", dt)
 
 
 class TwoServerPIR:
@@ -82,21 +442,87 @@ class TwoServerPIR:
     Both servers run the same binary on disjoint meshes in production; on
     this container they share the device but keep separate DB buffers and
     compiled steps, preserving the protocol structure exactly.
+
+    Two client APIs:
+
+      query(indices)   synchronous batch retrieval (pumps the scheduler
+                       inline when no session thread is running)
+      submit(index)    streaming session form: returns an
+                       :class:`AnswerFuture`; the scheduler coalesces
+                       concurrent clients' queries into padded bucket
+                       batches and reconciles both parties' answer shares
+                       asynchronously. Call :meth:`start` for a background
+                       session (or rely on ``query``/``pump``).
     """
 
     def __init__(self, db_words: np.ndarray, cfg: PIRConfig, mesh,
-                 *, path: str = "fused", n_queries: int = 4):
+                 *, path: str = "fused", n_queries: int = 4,
+                 buckets: Optional[Sequence[int]] = None,
+                 max_wait_s: float = DEFAULT_MAX_WAIT_S,
+                 n_clusters: int = 1):
         self.cfg = cfg
         self.servers = [
             PIRServer(party=b, db_words=db_words, cfg=cfg, mesh=mesh,
-                      n_queries=n_queries, path=path)
+                      n_queries=n_queries, path=path, buckets=buckets)
             for b in (0, 1)
         ]
         self.rng = np.random.default_rng(0)
+        self._lock = threading.Lock()
+        self.scheduler = self._make_scheduler(max_wait_s, n_clusters)
+
+    def _make_scheduler(self, max_wait_s: float, n_clusters: int
+                        ) -> QueryScheduler:
+        s0, s1 = self.servers
+
+        def collate(items):
+            return (dpf.stack_keys([k0 for k0, _ in items]),
+                    dpf.stack_keys([k1 for _, k1 in items]))
+
+        def stage(payload):
+            return (s0.stage_keys(payload[0]), s1.stage_keys(payload[1]))
+
+        def dispatch(staged):
+            return (s0.answer(staged[0]), s1.answer(staged[1]))
+
+        def finalize(raw, n):
+            r0, r1 = raw
+            rec = np.asarray(pir.reconstruct_xor(r0[:n], r1[:n]))
+            return list(rec)
+
+        return QueryScheduler(
+            collate=collate, stage=stage, dispatch=dispatch,
+            finalize=finalize, buckets=s0.buckets, n_clusters=n_clusters,
+            max_wait_s=max_wait_s)
+
+    # -- streaming session API ------------------------------------------
+
+    def start(self):
+        """Run the scheduler as a background session thread."""
+        self.scheduler.start()
+
+    def close(self):
+        self.scheduler.stop()
+
+    def __enter__(self):
+        self.start()
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def submit(self, index: int) -> AnswerFuture:
+        """Private retrieval of ``db[index]``; resolves to a [W]-word row."""
+        with self._lock:     # client-side keygen shares one rng
+            q = pir.query_gen(self.rng, index, self.cfg)
+        return self.scheduler.submit(q.keys)
+
+    # -- synchronous batch API ------------------------------------------
 
     def query(self, indices: Sequence[int]) -> np.ndarray:
         """Private retrieval of ``db[indices]``; returns [Q, W] words."""
-        k0, k1 = pir.batch_queries(self.rng, indices, self.cfg)
-        r0 = self.servers[0].answer(k0)
-        r1 = self.servers[1].answer(k1)
-        return np.asarray(pir.reconstruct_xor(r0, r1))
+        if not indices:
+            return np.empty((0, self.cfg.item_bytes // 4), np.uint32)
+        futs = [self.submit(i) for i in indices]
+        if not self.scheduler.running:
+            self.scheduler.pump()
+        return np.stack([f.result(timeout=120.0) for f in futs])

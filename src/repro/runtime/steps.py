@@ -13,17 +13,19 @@ Serve steps:
   prefill: full causal pass -> (last logits, KV cache)
   decode:  one token against the cache (``write=False`` for the dry-run
            cells whose cache is at capacity; the serve loop uses write=True)
+  pir:     the bucketed PIR answer-step family (one compiled step per batch
+           bucket, DESIGN.md §6) consumed by runtime.serve_loop
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.config import RunConfig
+from repro.config import PIRConfig, RunConfig
 from repro.models import build_model, input_specs
 from repro.optim import compression
 from repro.optim.optimizer import opt_init, opt_update, spec_for_state
@@ -333,3 +335,45 @@ def make_serve_step(run: RunConfig, mesh: Mesh, *,
     return ServeStep(prefill=jit_prefill, decode=jit_decode, model=model,
                      param_shardings=param_sh, cache_shardings=cache_sh,
                      input_structs=structs)
+
+
+class PIRStep(NamedTuple):
+    """Compiled PIR serving entry points (one bucket family, one party)."""
+    answer: Callable           # (db, keys) -> [bucket, W] shares (async)
+    stage_keys: Callable       # keys -> padded + device_put keys
+    buckets: Tuple[int, ...]
+    db_sharding: NamedSharding
+    n_compiles: Callable[[], int]    # cache-miss counter (tests/benches)
+
+
+def make_pir_serve_step(
+    cfg: PIRConfig,
+    mesh: Mesh,
+    *,
+    buckets: Optional[Sequence[int]] = None,
+    path: str = "fused",
+    collective: str = "gather",
+    party: int = 0,
+) -> PIRStep:
+    """Build the bucketed PIR answer-step family in the step-builder idiom.
+
+    Mirrors ``make_train_step``/``make_serve_step``: configs in, compiled
+    jit entry points with explicit shardings out. Each batch bucket lowers
+    exactly once (``core.server.BucketedServeFns``); the scheduler pads
+    ragged batches up to the covering bucket so odd-sized traffic never
+    triggers recompilation (DESIGN.md §6).
+    """
+    from repro.core.server import BucketedServeFns, default_buckets
+    from repro.launch.mesh import mesh_axis_size, pir_cluster_axes
+
+    n_clusters = 1
+    for a in pir_cluster_axes(mesh):
+        n_clusters *= mesh_axis_size(mesh, a)
+    if buckets is None:
+        buckets = default_buckets(n_clusters)
+    bucketed = BucketedServeFns(cfg, mesh, buckets=buckets, path=path,
+                                collective=collective, party=party)
+    db_sharding = bucketed.fns_for(bucketed.buckets[0])[0].db_sharding
+    return PIRStep(answer=bucketed.answer, stage_keys=bucketed.stage,
+                   buckets=bucketed.buckets, db_sharding=db_sharding,
+                   n_compiles=lambda: bucketed.n_compiles)

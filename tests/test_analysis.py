@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.analysis import hlo_cost, roofline
+from repro.compat import shard_map
 
 
 def _compile(f, *shapes):
@@ -82,7 +83,7 @@ def test_collective_parse_counts_psum():
     def f(a):
         return jax.lax.psum(a, "d")
 
-    fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("d", None),
+    fn = jax.jit(shard_map(f, mesh=mesh, in_specs=P("d", None),
                                out_specs=P(None, None), check_vma=False))
     c = fn.lower(x).compile()
     cost = hlo_cost.analyze(c.as_text())

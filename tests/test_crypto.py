@@ -5,7 +5,7 @@ uses AES-128 via AES-NI); the DPF construction is PRF-agnostic and the
 repo's production PRG is the ChaCha ARX permutation (DESIGN.md §2).
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 import jax.numpy as jnp
 

@@ -1,7 +1,7 @@
 """Data pipeline determinism/sharding + bit-packing roundtrips."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 import jax.numpy as jnp
 

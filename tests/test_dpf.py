@@ -10,7 +10,7 @@ Invariants under test (the cryptographic contract of core/dpf.py):
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 import jax.numpy as jnp
 
@@ -74,6 +74,7 @@ def test_additive_word_shares(log_n, n_words, data):
     np.testing.assert_array_equal(total, expect)
 
 
+@pytest.mark.slow   # ~1-2 min on the 1-core container
 def test_byte_shares_sum_mod_256():
     log_n = 7
     alpha = 93
@@ -88,6 +89,7 @@ def test_byte_shares_sum_mod_256():
     np.testing.assert_array_equal(total, expect)
 
 
+@pytest.mark.slow   # ~1-2 min on the 1-core container
 def test_single_key_leaf_bits_balanced():
     """One party's selection bits look ~uniform (no trivial leakage)."""
     log_n = 12

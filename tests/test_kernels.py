@@ -8,7 +8,7 @@ the indexing logic under test is round-count independent.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 import jax.numpy as jnp
 
@@ -87,6 +87,7 @@ def test_ggm_expand_grid_indexing_low_rounds():
     np.testing.assert_array_equal(np.asarray(got_t), np.asarray(want_t))
 
 
+@pytest.mark.slow   # ~1-2 min on the 1-core container
 def test_ggm_leaf_path_matches_dpf():
     """Full-domain kernel-driven expansion == core.dpf.eval_all."""
     log_n = 6

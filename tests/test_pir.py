@@ -6,7 +6,7 @@ matmul paths, plus the cluster topology and the aggregation collectives.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +38,7 @@ def test_xor_roundtrip_reference(idx):
     np.testing.assert_array_equal(rec, DB[idx])
 
 
+@pytest.mark.slow   # jit-compiles serve/eval steps (~1 min each here)
 def test_additive_roundtrip_reference():
     cfg = PIRConfig(n_items=N, mode="additive")
     dbb = pir.db_as_bytes(DB).astype(np.int8)
@@ -51,6 +52,7 @@ def test_additive_roundtrip_reference():
         np.testing.assert_array_equal(rec, pir.db_as_bytes(DB)[idx])
 
 
+@pytest.mark.slow   # jit-compiles serve/eval steps (~1 min each here)
 @pytest.mark.parametrize("path", ["baseline", "fused", "matmul"])
 def test_sharded_server_paths(mesh, path):
     mode = "additive" if path == "matmul" else "xor"
@@ -70,6 +72,7 @@ def test_sharded_server_paths(mesh, path):
     np.testing.assert_array_equal(rec, expect)
 
 
+@pytest.mark.slow   # jit-compiles serve/eval steps (~1 min each here)
 def test_collective_variants_agree(mesh):
     cfg = PIRConfig(n_items=N, batch_queries=2)
     idxs = [7, 700]
@@ -83,6 +86,7 @@ def test_collective_variants_agree(mesh):
     np.testing.assert_array_equal(outs[0], outs[1])
 
 
+@pytest.mark.slow   # jit-compiles serve/eval steps (~1 min each here)
 def test_fused_equals_baseline(mesh):
     cfg = PIRConfig(n_items=N, batch_queries=2)
     k0, _ = pir.batch_queries(RNG, [11, 222], cfg)
@@ -94,6 +98,7 @@ def test_fused_equals_baseline(mesh):
     np.testing.assert_array_equal(res["baseline"], res["fused"])
 
 
+@pytest.mark.slow   # jit-compiles serve/eval steps (~1 min each here)
 def test_two_server_deployment(mesh):
     from repro.runtime.serve_loop import TwoServerPIR
     cfg = PIRConfig(n_items=N, batch_queries=4)
@@ -103,6 +108,7 @@ def test_two_server_deployment(mesh):
     np.testing.assert_array_equal(out, DB[idx])
 
 
+@pytest.mark.slow   # jit-compiles serve/eval steps (~1 min each here)
 def test_phase_split_matches_paper_structure():
     """Table 1 instrumentation path: eval-then-scan == fused answers."""
     cfg = PIRConfig(n_items=N, batch_queries=2)

@@ -1,0 +1,240 @@
+"""Serving frontend: dynamic batching, pipelining, straggler shedding.
+
+Fast tier: the scheduler's control plane driven by fake collate/stage/
+dispatch/finalize callables (no XLA compiles, deterministic). Slow tier:
+the real two-party protocol through the scheduler — ragged batch sizes,
+bucket-cache reuse, and the streaming session API — sharing one pair of
+compiled serve steps across the module (compiles cost ~40 s each on this
+container).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.config import PIRConfig
+from repro.core import dpf, pir
+from repro.launch.mesh import make_local_mesh
+from repro.runtime.fault import StragglerMonitor
+from repro.runtime.serve_loop import (DEFAULT_MAX_WAIT_S, AnswerFuture,
+                                      QueryScheduler, TwoServerPIR)
+
+# ---------------------------------------------------------------------------
+# control plane (fast: fake data plane)
+# ---------------------------------------------------------------------------
+
+
+def make_fake_scheduler(log=None, buckets=(2, 4), n_clusters=1, **kw):
+    """Scheduler whose 'device' doubles each item; logs stage/dispatch/
+    finalize events so tests can assert pipeline interleaving."""
+    log = log if log is not None else []
+
+    def collate(items):
+        return list(items)
+
+    def stage(payload):
+        log.append(("stage", tuple(payload)))
+        # padding rule: replicate the last item up to the bucket
+        b = next(bb for bb in sorted(buckets) if bb >= len(payload))
+        return payload + [payload[-1]] * (b - len(payload))
+
+    def dispatch(staged):
+        log.append(("dispatch", tuple(staged)))
+        return [x * 2 for x in staged]
+
+    def finalize(raw, n):
+        log.append(("finalize", tuple(raw[:n])))
+        return raw[:n]
+
+    return QueryScheduler(collate=collate, stage=stage, dispatch=dispatch,
+                          finalize=finalize, buckets=buckets,
+                          n_clusters=n_clusters, **kw), log
+
+
+def test_coalesce_pad_and_answer_order():
+    sched, _ = make_fake_scheduler(buckets=(2, 4))
+    futs = [sched.submit(i) for i in range(5)]       # 4 cut eagerly, 1 left
+    n = sched.pump()                                 # flush cuts the tail
+    assert n == 5
+    assert [f.result(0) for f in futs] == [0, 2, 4, 6, 8]
+    assert sched.stats.batches == 2
+    assert sched.stats.bucket_counts == {4: 1, 2: 1}
+    assert sched.stats.padded == 1                   # 1 query in a 2-bucket
+    assert 0 < sched.stats.pad_fraction < 1
+
+
+def test_double_buffer_stages_next_before_completing_current():
+    sched, log = make_fake_scheduler(buckets=(2,))
+    for i in range(6):
+        sched.submit(i)                              # three 2-query batches
+    sched.pump()
+    kinds = [k for k, _ in log]
+    # batch 2 must be staged AND dispatched before batch 1 finalizes
+    assert kinds.index("finalize") > kinds.index("dispatch", 1)
+    assert kinds == ["stage", "dispatch", "stage", "dispatch", "finalize",
+                     "stage", "dispatch", "finalize", "finalize"]
+
+
+def test_ragged_bucket_selection():
+    sched, _ = make_fake_scheduler(buckets=(2, 4, 8))
+    futs = [sched.submit(i) for i in range(3)]
+    sched.pump()
+    assert [f.result(0) for f in futs] == [0, 2, 4]
+    assert sched.stats.bucket_counts == {4: 1}       # 3 -> smallest cover
+    assert sched.stats.padded == 1
+
+
+def test_straggler_reassignment_sheds_queued_batches():
+    mon = StragglerMonitor(factor=2.0, alpha=1.0)
+    mon.record("cluster0", 50.0)                     # cluster0 is flagged
+    mon.record("cluster1", 1.0)
+    mon.record("cluster2", 1.1)
+    sched, _ = make_fake_scheduler(buckets=(2,), n_clusters=3, monitor=mon)
+    for i in range(12):                              # 6 batches round-robin
+        sched.submit(i)
+    sched.flush()
+    assert len(sched.queues["cluster0"]) == 2
+    moved = sched.rebalance()
+    assert moved == 2
+    assert sched.stats.reassignments == 2
+    assert sched.queues["cluster0"] == []
+    relocated = [b for lane in ("cluster1", "cluster2")
+                 for b in sched.queues[lane]]
+    assert len(relocated) == 6                       # nothing lost
+    for lane in ("cluster1", "cluster2"):
+        for b in sched.queues[lane]:
+            assert b.cluster == lane                 # ownership rewritten
+    # queued work still completes after shedding
+    assert sched.pump() == 12
+
+
+def test_failure_propagates_to_futures():
+    def boom(raw, n):
+        raise RuntimeError("device lost")
+    sched = QueryScheduler(collate=list, stage=lambda p: p,
+                           dispatch=lambda s: s, finalize=boom,
+                           buckets=(2,))
+    futs = [sched.submit(i) for i in range(2)]
+    with pytest.raises(RuntimeError):
+        sched.pump()
+    with pytest.raises(RuntimeError, match="device lost"):
+        futs[0].result(0)
+    assert futs[1].done()
+
+
+def test_background_session_thread():
+    sched, _ = make_fake_scheduler(buckets=(2, 4), max_wait_s=0.001)
+    sched.start()
+    try:
+        futs = [sched.submit(i) for i in range(7)]
+        assert [f.result(10.0) for f in futs] == [2 * i for i in range(7)]
+        # under-full tail was cut by the max_wait timer, not lost
+        assert sched.stats.answered == 7
+    finally:
+        sched.stop()
+    assert not sched.running
+    # stop() drains: a post-stop pump has nothing left
+    assert sched.pump() == 0
+
+
+def test_session_thread_death_resolves_every_future():
+    """A data-plane failure must fail ALL outstanding futures, not hang
+    the clients whose batches were queued behind the poisoned one."""
+    def boom(raw, n):
+        raise RuntimeError("poisoned batch")
+    sched = QueryScheduler(collate=list, stage=lambda p: p,
+                           dispatch=lambda s: s, finalize=boom,
+                           buckets=(2,), max_wait_s=0.001)
+    futs = [sched.submit(i) for i in range(6)]     # 3 batches outstanding
+    sched.start()
+    for f in futs:
+        with pytest.raises(RuntimeError, match="poisoned batch"):
+            f.result(timeout=30.0)
+    sched.stop()
+
+
+def test_shed_never_assigns_onto_idle_stragglers():
+    """A flagged lane with an empty queue is still slow: it must not be a
+    reassignment receiver."""
+    mon = StragglerMonitor(factor=2.0, alpha=1.0)
+    for lane, lat in (("c0", 100.0), ("c1", 100.0), ("c2", 1.0),
+                      ("c3", 1.0), ("c4", 1.0)):
+        mon.record(lane, lat)
+    assert sorted(mon.stragglers()) == ["c0", "c1"]
+    queues = {"c0": [], "c1": ["a", "b"], "c2": [], "c3": [], "c4": []}
+    out, moved = mon.shed_stragglers(queues)
+    assert moved == 2
+    assert out["c0"] == [] and out["c1"] == []     # c0 received nothing
+    assert sorted(sum((out[c] for c in ("c2", "c3", "c4")), [])) == ["a", "b"]
+
+
+def test_answer_future_timeout():
+    fut = AnswerFuture()
+    with pytest.raises(TimeoutError):
+        fut.result(timeout=0.01)
+    fut.set_result(41)
+    assert fut.done() and fut.result() == 41
+
+
+def test_pad_keys_replicates_last_key():
+    k0, _ = dpf.gen_keys(np.random.default_rng(0), 3, 5)
+    batch = dpf.stack_keys([k0, k0])
+    padded = dpf.pad_keys(batch, 4)
+    assert dpf.n_queries_of(padded) == 4
+    np.testing.assert_array_equal(np.asarray(padded.root_seed[3]),
+                                  np.asarray(batch.root_seed[-1]))
+    assert padded.cw_seed.shape == (4,) + batch.cw_seed.shape[1:]
+    with pytest.raises(ValueError):
+        dpf.pad_keys(batch, 1)
+
+
+# ---------------------------------------------------------------------------
+# data plane (slow: real two-party protocol, shared compiled steps)
+# ---------------------------------------------------------------------------
+
+LOG_N = 8
+N = 1 << LOG_N
+
+
+@pytest.fixture(scope="module")
+def system():
+    db = pir.make_database(np.random.default_rng(0), N, 32)
+    cfg = PIRConfig(n_items=N, item_bytes=32, batch_queries=4)
+    sys2 = TwoServerPIR(db, cfg, make_local_mesh(), path="fused",
+                        n_queries=4, buckets=(4,))
+    return sys2, db
+
+
+@pytest.mark.slow
+def test_ragged_traffic_padded_answers_correct(system):
+    """Batch sizes off the bucket grid: padded slots never corrupt answers."""
+    sys2, db = system
+    for idx in ([3], [9, 200, N - 1], [0, 1, 2, 3]):   # 1, 3, 4 -> bucket 4
+        np.testing.assert_array_equal(sys2.query(idx), db[idx])
+    assert sys2.scheduler.stats.padded >= 3 + 1        # 1->4 and 3->4 pads
+
+
+@pytest.mark.slow
+def test_bucket_cache_no_recompile_on_repeat_sizes(system):
+    """Every ragged size maps onto the one compiled bucket: no recompiles."""
+    sys2, db = system
+    sys2.query([5])                                    # warm the bucket cache
+    before = [s.n_compiles for s in sys2.servers]
+    for idx in ([7], [8, 9], [1, 2, 3], [4, 5, 6, 7], [250]):
+        np.testing.assert_array_equal(sys2.query(idx), db[idx])
+    assert [s.n_compiles for s in sys2.servers] == before
+    assert all(c == 1 for c in before)                 # one bucket, one lower
+
+
+@pytest.mark.slow
+def test_streaming_session_reconciles_async(system):
+    """submit(index) futures resolve correctly from the session thread."""
+    sys2, db = system
+    indices = [5, 77, 250, 0, 131, 17]
+    with sys2:
+        futs = [sys2.submit(i) for i in indices]
+        rows = [f.result(timeout=120.0) for f in futs]
+    for i, r in zip(indices, rows):
+        np.testing.assert_array_equal(r, db[i])
+    assert not sys2.scheduler.running

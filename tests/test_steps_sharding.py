@@ -14,6 +14,8 @@ from repro.runtime.steps import (_apply_fsdp, _filter_axes,
                                  _fix_divisibility, make_serve_step,
                                  make_train_step)
 
+pytestmark = pytest.mark.slow    # compile-heavy: full-step jits on a 1-core CPU
+
 
 def _fake_mesh(shape, axes):
     """Axis-size stand-in with mesh-like .shape/.axis_names (no devices)."""

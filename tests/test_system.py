@@ -20,6 +20,9 @@ from repro.core.server import PIRServer
 from repro.launch.mesh import make_local_mesh
 from repro.runtime.serve_loop import PIRServeLoop, TwoServerPIR
 
+pytestmark = pytest.mark.slow    # compile-heavy: full-step jits on a 1-core CPU
+
+
 
 @pytest.fixture(scope="module")
 def mesh():

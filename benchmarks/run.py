@@ -12,7 +12,7 @@ import sys
 import time
 
 BENCHES = ["fig3", "fig9", "fig10_table1", "fig11", "fig12", "kernels",
-           "serving"]
+           "serving", "protocols"]
 
 
 def main(argv=None) -> int:

@@ -8,7 +8,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.config import PIRConfig
+from repro.configs.pir import PIR_SMOKE
 from repro.core import pir
 from repro.launch.mesh import make_local_mesh
 from repro.runtime.serve_loop import TwoServerPIR
@@ -16,7 +16,7 @@ from repro.runtime.serve_loop import TwoServerPIR
 def main():
     # A database of 2^14 records, each a 32-byte hash — the paper's
     # certificate-transparency / breached-credentials shape (§5.2).
-    cfg = PIRConfig(n_items=1 << 14, item_bytes=32, batch_queries=4)
+    cfg = PIR_SMOKE
     rng = np.random.default_rng(0)
     db = pir.make_database(rng, cfg.n_items, cfg.item_bytes)
     print(f"DB: {cfg.n_items} records x {cfg.item_bytes} B "

@@ -1,10 +1,17 @@
 #!/usr/bin/env bash
-# Fast CI gate: byte-compile every tree we ship, then run the fast test
-# tier (pytest.ini defaults to -m "not slow"). The slow tier (system /
-# sharding / compile-heavy) runs out-of-band:  pytest -m slow
+# Fast CI gate: byte-compile every tree we ship, run the fast test tier
+# (pytest.ini defaults to -m "not slow"), then run the quickstart example
+# end-to-end at PIR_SMOKE scale — it exercises the public serving facade
+# (TwoServerPIR over the protocol registry), so API breakage there is
+# caught here instead of by users. The k-server facade demo
+# (examples/multi_server.py) and the slow tier (system / sharding /
+# compile-heavy) run out-of-band:  pytest -m slow
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m compileall -q src benchmarks examples scripts tests
 python -m pytest -q
+# smoke gate: one compiled serve step per party (~1 min each on the dev
+# container), full client -> two servers -> reconstruct round trip
+python examples/quickstart.py

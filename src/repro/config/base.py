@@ -222,17 +222,80 @@ class OptimizerConfig:
         return _asdict(self)
 
 
+#: deprecated ``mode=`` strings -> protocol registry names (core/protocol.py)
+_PIR_MODE_PROTOCOLS = {"xor": "xor-dpf-2", "additive": "additive-dpf-2"}
+
+
+def _implied_share_kind(protocol_name: str) -> str:
+    """Best-effort share algebra from a protocol *name* (naming convention:
+    additive schemes carry 'additive' in their registry name). The
+    registered ``PIRProtocol.share_kind`` attribute is authoritative —
+    this fallback exists only where the config layer cannot (or should
+    not yet) touch the registry."""
+    return "additive" if "additive" in protocol_name else "xor"
+
+
 @dataclass(frozen=True)
 class PIRConfig:
-    """Paper-side configuration: one PIR database + protocol choices."""
+    """Paper-side configuration: one PIR database + protocol choices.
+
+    ``protocol`` names an entry in the protocol registry
+    (``core/protocol.py``): ``xor-dpf-2`` (paper-faithful two-server XOR),
+    ``additive-dpf-2`` (Z_256 shares, int8-GEMM path), ``xor-dpf-k``
+    (k-server XOR, k = ``n_servers``). The old ``mode="xor"|"additive"``
+    string is a **deprecated** constructor alias kept for backward
+    compatibility: a non-empty ``mode`` maps to the matching registry name
+    (with a ``DeprecationWarning``) and, when it disagrees with a
+    carried-over ``protocol`` (the ``dataclasses.replace(cfg, mode=...)``
+    idiom), the explicit ``mode`` wins. After construction ``mode`` is
+    normalized back to ``""`` — read :attr:`share_kind` (or ``protocol``)
+    instead; storing only ``protocol`` is what keeps ``replace()`` working
+    in both directions.
+    """
     n_items: int                   # N: number of DB records (power of two)
     item_bytes: int = 32           # L: record payload (paper: 32-byte hashes)
-    mode: str = "xor"              # xor (paper-faithful) | additive (MXU)
-    n_servers: int = 2
+    mode: str = ""                 # DEPRECATED constructor alias; always ""
+    protocol: str = ""             # registry name; "" -> xor-dpf-2 (or mode)
+    n_servers: int = 2             # parties (xor-dpf-k reads this as k)
     clusters: int = 1              # DPU clusters (paper §3.4)
     batch_queries: int = 32        # concurrent queries per step
     prf: str = "chacha12"          # chacha12 | chacha8 (pluggable ARX PRG)
     fused_kernel: bool = False     # fused GGM-expand + dpXOR (beyond paper)
+
+    def __post_init__(self):
+        mode, proto = self.mode, self.protocol
+        if mode and mode not in _PIR_MODE_PROTOCOLS:
+            raise ValueError(
+                f"unknown PIR mode {mode!r}; use protocol= with one of the "
+                f"registry names instead")
+        if mode:
+            import warnings
+            warnings.warn(
+                "PIRConfig(mode=...) is deprecated; use "
+                f"protocol={_PIR_MODE_PROTOCOLS[mode]!r}",
+                DeprecationWarning, stacklevel=3)
+            # the explicit mode wins unless the protocol already agrees on
+            # the share algebra (e.g. mode="xor" + protocol="xor-dpf-k")
+            if not proto or _implied_share_kind(proto) != mode:
+                proto = _PIR_MODE_PROTOCOLS[mode]
+        elif not proto:
+            proto = "xor-dpf-2"
+        object.__setattr__(self, "protocol", proto)
+        object.__setattr__(self, "mode", "")
+
+    @property
+    def share_kind(self) -> str:
+        """The share algebra: ``xor`` | ``additive``.
+
+        Consults the registered protocol (the authoritative source) when
+        available; falls back to the naming convention for names not (yet)
+        registered, since configs are constructible standalone.
+        """
+        try:
+            from repro.core.protocol import get
+            return get(self.protocol).share_kind
+        except Exception:
+            return _implied_share_kind(self.protocol)
 
     @property
     def log_n(self) -> int:

@@ -3,6 +3,11 @@
 Records are 32-byte hashes (SHA-256-sized, the paper's CT / credential-
 checking format). DB sizes mirror the paper's 0.5–8 GB sweep; n_items is
 db_bytes / 32 and always a power of two (the GGM tree domain).
+
+Share schemes are named by protocol-registry entries (``core/protocol.py``):
+``xor-dpf-2`` (default), ``additive-dpf-2``, ``xor-dpf-k``. The old
+``mode="xor"|"additive"`` kwarg still works via the deprecation shim in
+``PIRConfig`` but new configs should name a protocol.
 """
 from repro.config import PIRConfig
 
@@ -13,13 +18,21 @@ PIR_2G = PIRConfig(n_items=1 << 26, item_bytes=32)
 PIR_4G = PIRConfig(n_items=1 << 27, item_bytes=32)
 PIR_8G = PIRConfig(n_items=1 << 28, item_bytes=32)
 
-# additive-share mode (the MXU batched-matmul path, beyond-paper)
-PIR_1G_ADD = PIRConfig(n_items=1 << 25, item_bytes=32, mode="additive")
+# additive-share protocol (the MXU batched-matmul path, beyond-paper)
+PIR_1G_ADD = PIRConfig(n_items=1 << 25, item_bytes=32,
+                       protocol="additive-dpf-2")
 
-# CPU-container scale for tests/benches
+# k-server XOR at 1 GB (beyond-paper scenario diversity; k = n_servers)
+PIR_1G_K3 = PIRConfig(n_items=1 << 25, item_bytes=32,
+                      protocol="xor-dpf-k", n_servers=3)
+
+# CPU-container scale for tests/benches/examples
 PIR_SMOKE = PIRConfig(n_items=1 << 14, item_bytes=32, batch_queries=4)
-PIR_SMOKE_ADD = PIRConfig(n_items=1 << 14, item_bytes=32, mode="additive",
-                          batch_queries=4)
+PIR_SMOKE_ADD = PIRConfig(n_items=1 << 14, item_bytes=32,
+                          protocol="additive-dpf-2", batch_queries=4)
+# 2^12 records: three parties' serve steps compile in CI-tolerable time
+PIR_SMOKE_K3 = PIRConfig(n_items=1 << 12, item_bytes=32,
+                         protocol="xor-dpf-k", n_servers=3, batch_queries=4)
 
 PIR_CONFIGS = {
     "pir-512m": PIR_512M,
@@ -28,6 +41,8 @@ PIR_CONFIGS = {
     "pir-4g": PIR_4G,
     "pir-8g": PIR_8G,
     "pir-1g-add": PIR_1G_ADD,
+    "pir-1g-k3": PIR_1G_K3,
     "pir-smoke": PIR_SMOKE,
     "pir-smoke-add": PIR_SMOKE_ADD,
+    "pir-smoke-k3": PIR_SMOKE_K3,
 }

@@ -1,19 +1,23 @@
-"""Two-server PIR protocol over DPF keys (paper §2.3, §3, Algorithm 1).
+"""Client + reference-server PIR primitives (paper §2.3, §3, Algorithm 1).
 
 Roles
 -----
-Client:  ``query_gen`` (Gen + key split), ``reconstruct_*`` (r1 ⊕ r2 / r1 + r2).
+Client:  ``query_gen`` (Gen + per-party key split, dispatched through the
+         protocol registry — ``core/protocol.py``), ``reconstruct_*``
+         primitives (r1 ⊕ r2 / r1 + r2).
 Server:  ``answer_*`` — the all-for-one scan. Single-device reference forms
          live here; the sharded production form (shard_map over the
-         data=clusters / model=DB-shards mesh) lives in ``core.server``.
+         data=clusters / model=DB-shards mesh) lives in ``core.server``,
+         parameterized by a registered ``PIRProtocol``.
 
-Modes
------
-xor       paper-faithful: selection bits t(j) weight an XOR fold over DB rows
-          (Figure 2 / Algorithm 1's dpXOR). Bit-exact for arbitrary payloads.
-additive  Z_256 byte shares; the batched-query form is an int8 matrix product
-          (queries × DB) that the MXU executes natively — the beyond-paper
-          operational-intensity lever (see DESIGN.md §2, kernels/pir_matmul).
+Share schemes (see ``core/protocol.py`` for the full protocol plane)
+--------------------------------------------------------------------
+xor-dpf-2       paper-faithful: selection bits t(j) weight an XOR fold over
+                DB rows (Figure 2 / Algorithm 1's dpXOR). Bit-exact.
+additive-dpf-2  Z_256 byte shares; the batched-query form is an int8 matrix
+                product (queries × DB) that the MXU executes natively — the
+                beyond-paper operational-intensity lever (DESIGN.md §2).
+xor-dpf-k       k-server XOR shares (beyond-paper; DESIGN.md §7.2).
 """
 from __future__ import annotations
 
@@ -27,7 +31,6 @@ import numpy as np
 
 from repro.config import PIRConfig
 from repro.core import dpf
-from repro.crypto.chacha import PRG_ROUNDS
 from repro.crypto.packing import words_to_bytes
 
 U32 = jnp.uint32
@@ -61,33 +64,37 @@ def db_as_bytes(db_words: np.ndarray) -> np.ndarray:
 
 @dataclass
 class Query:
-    """A client query: one DPF key pair (k0 to server 0, k1 to server 1)."""
+    """A client query: one key pytree per party (k of them).
+
+    Two-server schemes keep the familiar shape ``keys == (k0, k1)``; the
+    k-server protocols extend the tuple (one entry per non-colluding party).
+    """
     index: int
-    keys: Tuple[dpf.DPFKey, dpf.DPFKey]
+    keys: Tuple[dpf.DPFKey, ...]
 
 
 def query_gen(rng: np.random.Generator, index: int, cfg: PIRConfig) -> Query:
-    """GENERATEANDSENDKEYS (Algorithm 1 ①-②)."""
-    rounds = PRG_ROUNDS[cfg.prf]
-    if cfg.mode == "xor":
-        keys = dpf.gen_keys(rng, index, cfg.log_n, rounds=rounds)
-    elif cfg.mode == "additive":
-        keys = dpf.gen_keys(
-            rng, index, cfg.log_n,
-            payload=np.array([1], np.uint32), payload_mod=256, rounds=rounds,
-        )
-    else:
-        raise ValueError(f"unknown PIR mode {cfg.mode!r}")
-    return Query(index=index, keys=keys)
+    """GENERATEANDSENDKEYS (Algorithm 1 ①-②), via the config's protocol.
+
+    Thin compat wrapper over ``core.protocol``: the registered
+    ``PIRProtocol`` named by ``cfg.protocol`` owns key generation.
+    """
+    from repro.core import protocol as protocol_mod
+    proto = protocol_mod.for_config(cfg)
+    return Query(index=index, keys=proto.query_gen(rng, index, cfg))
 
 
 def batch_queries(rng: np.random.Generator, indices: Sequence[int],
-                  cfg: PIRConfig) -> Tuple[dpf.DPFKey, dpf.DPFKey]:
-    """Generate and stack a batch of queries into two batched key pytrees."""
+                  cfg: PIRConfig) -> Tuple[dpf.DPFKey, ...]:
+    """Generate and stack a batch of queries into per-party batched pytrees.
+
+    Returns one batched key pytree per party (two for the 2-server
+    protocols, ``cfg.n_servers`` for ``xor-dpf-k``).
+    """
     qs = [query_gen(rng, i, cfg) for i in indices]
-    k0 = dpf.stack_keys([q.keys[0] for q in qs])
-    k1 = dpf.stack_keys([q.keys[1] for q in qs])
-    return k0, k1
+    n_parties = len(qs[0].keys)
+    return tuple(dpf.stack_keys([q.keys[p] for q in qs])
+                 for p in range(n_parties))
 
 
 def reconstruct_xor(r0: jax.Array, r1: jax.Array) -> jax.Array:

@@ -1,0 +1,541 @@
+"""The protocol plane: pluggable PIR schemes + kernel-path execution plans.
+
+The paper's architecture (§3) is multi-*server* PIR, but everything that
+varies between schemes used to hide inside a ``mode="xor"|"additive"``
+string branched on across three layers. This module is the seam that
+replaces it (DESIGN.md §7):
+
+``PIRProtocol``  what the *parties* compute — key generation, the per-shard
+                 answer contraction, the cross-shard reduction algebra, and
+                 client-side reconstruction. One implementation per share
+                 scheme; a registry (mirroring ``models/registry.py``
+                 dispatch) maps names to instances.
+
+``ExecutionPlan``  *how* one answer step runs — which expansion strategy
+                 (materialize selection bits vs fused chunked expand+scan),
+                 which scan kernel (pure-jnp oracle vs the Pallas
+                 ``dpxor``/``pir_matmul`` bodies), and which aggregation
+                 collective. Picked per (db size, batch bucket, backend) by
+                 :func:`plan_for`, or forced via the legacy ``path`` strings.
+
+Registered protocols
+--------------------
+xor-dpf-2       the paper's two-server XOR scheme: one GGM DPF pair,
+                selection bits weight an XOR fold over DB rows.
+additive-dpf-2  two-server Z_256 additive shares; a query batch is one
+                int8 GEMM against the byte-viewed DB (the MXU
+                operational-intensity lever, beyond-paper).
+xor-dpf-k       k>=2 servers, k-of-k XOR shares (beyond-paper, 1-private):
+                one real DPF pair (parties 0, 1) blinded by a ring of
+                pairwise-shared GGM mask seeds — party i expands masks
+                m(s_i) and m(s_{(i+1) mod k}), so every seed is held by
+                exactly two parties and every mask cancels in the
+                XOR over all k answers while each single server sees only
+                pseudorandom selection vectors. Every party scans the full
+                DB (equal work), and reconstruction is XOR over all k
+                answer shares. k = ``PIRConfig.n_servers``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import PIRConfig
+from repro.core import dpf
+from repro.core.pir import answer_additive_matmul, dpxor, xor_fold
+from repro.crypto.chacha import PRG_ROUNDS
+
+U32 = jnp.uint32
+
+
+# ---------------------------------------------------------------------------
+# Execution plans: the kernel-path axis, decoupled from the share scheme
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ExecutionPlan:
+    """How one compiled answer step executes (DESIGN.md §7.3).
+
+    expand     "materialize": phase-split — Eval(k,·) selection vectors are
+               written out, then scanned (the paper's host-eval structure).
+               "fused": chunked expand+scan; selection bits never round-trip
+               through HBM. XOR protocols only — the GEMM contraction always
+               materializes its share matrix.
+    scan       "jnp": the pure-jnp oracle contraction (also the GSPMD
+               dry-run path). "pallas": the tiled kernel bodies —
+               ``kernels/dpxor.py`` for XOR scans, ``kernels/pir_matmul.py``
+               for the additive GEMM.
+    chunk_log  fused path: log2 leaves per expand+scan chunk.
+    collective "gather" | "butterfly": XOR all-reduce shape over the DB-shard
+               axis (additive protocols psum natively and ignore this).
+    """
+    expand: str = "materialize"
+    scan: str = "jnp"
+    chunk_log: int = 12
+    collective: str = "gather"
+
+    @property
+    def name(self) -> str:
+        return f"{self.expand}/{self.scan}"
+
+
+#: legacy ``path=`` strings -> plans (the pre-registry server API).
+PATH_PLANS: Dict[str, ExecutionPlan] = {
+    "baseline": ExecutionPlan(expand="materialize", scan="jnp"),
+    "fused": ExecutionPlan(expand="fused", scan="jnp"),
+    "matmul": ExecutionPlan(expand="materialize", scan="jnp"),
+    "pallas": ExecutionPlan(expand="materialize", scan="pallas"),
+}
+
+
+def resolve_plan(path: Optional[str], cfg: PIRConfig, n_queries: int, *,
+                 chunk_log: int = 12, collective: str = "gather"
+                 ) -> ExecutionPlan:
+    """A plan from a legacy path string, or the selector when path is None."""
+    if path is None or path == "auto":
+        plan = plan_for(cfg, n_queries, chunk_log=chunk_log)
+    elif path in PATH_PLANS:
+        plan = PATH_PLANS[path]
+    else:
+        raise ValueError(f"unknown path {path!r}; "
+                         f"expected one of {sorted(PATH_PLANS)} or 'auto'")
+    return replace(plan, chunk_log=chunk_log, collective=collective)
+
+
+def plan_for(cfg: PIRConfig, n_queries: int, *,
+             backend: Optional[str] = None,
+             chunk_log: int = 12) -> ExecutionPlan:
+    """Pick the kernel path per (db size, batch bucket, backend).
+
+    Selection rules (DESIGN.md §7.3):
+      * additive protocols contract via the GEMM regardless — ``scan``
+        chooses jnp dot vs the Pallas ``pir_matmul`` body;
+      * XOR protocols materialize bits only while the per-query bit vector
+        stays small (db <= 2^chunk_log rows — a global-size heuristic: a
+        sharded mesh divides the per-device rows further, only making
+        materialization cheaper); past that the fused chunked expand+scan
+        keeps selection bits out of HBM;
+      * the Pallas bodies run real Mosaic only on a TPU backend — on CPU
+        they would execute in interpret mode, so the jnp oracle (which XLA
+        compiles natively) is the fast CPU path;
+      * batch bucket: single-query buckets skip the fused chunk machinery
+        (nothing to amortize; the materialized form has the simpler HLO).
+    """
+    if backend is None:
+        backend = jax.default_backend()
+    scan = "pallas" if backend == "tpu" else "jnp"
+    proto = get(cfg.protocol)
+    if proto.share_kind == "additive":
+        return ExecutionPlan(expand="materialize", scan=scan,
+                             chunk_log=chunk_log)
+    small_db = cfg.n_items <= (1 << chunk_log)
+    expand = "materialize" if small_db or n_queries <= 1 else "fused"
+    return ExecutionPlan(expand=expand, scan=scan, chunk_log=chunk_log)
+
+
+# ---------------------------------------------------------------------------
+# Protocol interface
+# ---------------------------------------------------------------------------
+
+class PIRProtocol:
+    """One PIR scheme: what each of the n parties computes.
+
+    Implementations are stateless; all shapes come from the ``PIRConfig``
+    and the key pytrees themselves. ``answer_local`` runs *inside*
+    shard_map (one DB shard), so it must be pure traced jax.
+    """
+
+    name: str = ""
+    share_kind: str = "xor"            # xor | additive (reduction algebra)
+
+    # -- client side ----------------------------------------------------
+    def n_parties(self, cfg: PIRConfig) -> int:
+        raise NotImplementedError
+
+    def query_gen(self, rng: np.random.Generator, index: int,
+                  cfg: PIRConfig) -> Tuple[dpf.DPFKey, ...]:
+        """Gen: one per-party key pytree per party, for one query index."""
+        raise NotImplementedError
+
+    def reconstruct(self, answers: Sequence[jax.Array]) -> jax.Array:
+        """Combine all parties' answer shares into the record."""
+        raise NotImplementedError
+
+    def record_struct(self, cfg: PIRConfig) -> Tuple[Tuple[int, ...], type]:
+        """(shape tail, dtype) of one reconstructed record — XOR schemes
+        return u32 words, additive schemes Z_256 bytes."""
+        if self.share_kind == "additive":
+            return (cfg.item_bytes,), np.uint8
+        return (cfg.item_bytes // 4,), np.uint32
+
+    # -- server side ----------------------------------------------------
+    def key_specs(self, cfg: PIRConfig, n_queries: int, *, party: int = 0):
+        """ShapeDtypeStruct stand-ins for a batched key pytree (dry-run
+        input). Aux data (party, rounds) must match real keys exactly for
+        treedef-sensitive uses (per-bucket jit in_shardings)."""
+        raise NotImplementedError
+
+    def answer_local(self, db_local: jax.Array, keys_local,
+                     start_block, log_local: int,
+                     plan: ExecutionPlan) -> jax.Array:
+        """One shard's partial answers for a batch of keys.
+
+        ``db_local`` is the [rows_local, W] u32 shard; ``start_block`` its
+        shard index (leaf range [start_block * rows_local, ...)).
+        """
+        raise NotImplementedError
+
+    def reduce(self, partial_res: jax.Array, axis: str, n_shards: int,
+               plan: ExecutionPlan) -> jax.Array:
+        """Cross-shard reduction of partial answers over mesh axis ``axis``."""
+        raise NotImplementedError
+
+    # -- batching (shared defaults) -------------------------------------
+    def pad(self, keys, n_total: int):
+        """Pad a batched key pytree up to its bucket (DESIGN.md §6 rule)."""
+        return dpf.pad_keys(keys, n_total)
+
+    def n_queries(self, keys) -> int:
+        return dpf.n_queries_of(keys)
+
+
+# ---------------------------------------------------------------------------
+# Registry (models/registry.py idiom: names -> implementations)
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, PIRProtocol] = {}
+
+
+def register(proto: PIRProtocol) -> PIRProtocol:
+    if not proto.name:
+        raise ValueError("protocol must carry a name")
+    _REGISTRY[proto.name] = proto
+    return proto
+
+
+def get(name: str) -> PIRProtocol:
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown protocol {name!r}; registered: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def for_config(cfg: PIRConfig) -> PIRProtocol:
+    """The protocol a config names (``PIRConfig.protocol``; the deprecated
+    ``mode=`` strings are aliased to registry names by the config shim)."""
+    return get(cfg.protocol)
+
+
+# ---------------------------------------------------------------------------
+# XOR scan helpers shared by the XOR protocols
+# ---------------------------------------------------------------------------
+
+def xor_allreduce_gather(partial_res: jax.Array, axis: str) -> jax.Array:
+    """XOR all-reduce via all_gather + local fold (paper's host aggregation)."""
+    gathered = jax.lax.all_gather(partial_res, axis)          # [P, ...]
+    return xor_fold(gathered, 0)
+
+
+def xor_allreduce_butterfly(partial_res: jax.Array, axis: str, size: int
+                            ) -> jax.Array:
+    """XOR all-reduce via a recursive-doubling butterfly (log P ppermutes).
+
+    Collective-study alternative for §Perf: moves the same bytes in log P
+    rounds of pairwise exchange instead of one P-way gather.
+    """
+    x = partial_res
+    shift = 1
+    while shift < size:
+        perm = [(i, i ^ shift) for i in range(size)]
+        x = x ^ jax.lax.ppermute(x, axis, perm)
+        shift <<= 1
+    return x
+
+
+def _xor_scan(db_local: jax.Array, bits: jax.Array,
+              plan: ExecutionPlan) -> jax.Array:
+    """[R, W] db x [Q, R] bits -> [Q, W], jnp oracle or the Pallas body."""
+    if plan.scan == "pallas":
+        from repro.kernels import ops
+        return ops.dpxor(db_local, bits)
+    return jax.vmap(lambda b: dpxor(db_local, b))(bits)
+
+
+def _xor_reduce(partial_res: jax.Array, axis: str, n_shards: int,
+                plan: ExecutionPlan) -> jax.Array:
+    if plan.collective == "butterfly":
+        return xor_allreduce_butterfly(partial_res, axis, n_shards)
+    return xor_allreduce_gather(partial_res, axis)
+
+
+def _words_to_bytes_i8(w: jax.Array) -> jax.Array:
+    """[..., W] u32 -> [..., 4W] i8 byte view (little-endian word order)."""
+    sh = jnp.asarray([0, 8, 16, 24], dtype=U32)
+    b = (w[..., None] >> sh) & U32(0xFF)
+    return b.reshape(w.shape[:-1] + (w.shape[-1] * 4,)).astype(jnp.int8)
+
+
+def _dpf_key_specs(cfg: PIRConfig, n_queries: int, *, party: int,
+                   with_payload: bool,
+                   components: Optional[int] = None) -> dpf.DPFKey:
+    """Batched DPFKey ShapeDtypeStructs, optionally with a component axis."""
+    log_n = cfg.log_n
+    lead = (n_queries,) if components is None else (n_queries, components)
+    mk = lambda *s: jax.ShapeDtypeStruct(lead + s, np.uint32)
+    return dpf.DPFKey(
+        party=party, log_n=log_n,
+        root_seed=mk(4), cw_seed=mk(log_n, 4), cw_t=mk(log_n, 2),
+        cw_final=mk(1) if with_payload else None,
+        rounds=PRG_ROUNDS.get(cfg.prf, 12),
+    )
+
+
+# ---------------------------------------------------------------------------
+# xor-dpf-2: the paper's two-server scheme
+# ---------------------------------------------------------------------------
+
+class _XorProtocol(PIRProtocol):
+    """Shared XOR share algebra: reduction collective + XOR reconstruct."""
+
+    share_kind = "xor"
+
+    def reduce(self, partial_res, axis, n_shards, plan):
+        return _xor_reduce(partial_res, axis, n_shards, plan)
+
+    def reconstruct(self, answers):
+        out = answers[0]
+        for a in answers[1:]:
+            out = jnp.bitwise_xor(out, a)
+        return out
+
+
+class XorDpf2(_XorProtocol):
+    """Two-server XOR PIR over one GGM DPF pair (paper §2.3, Algorithm 1)."""
+
+    name = "xor-dpf-2"
+
+    def n_parties(self, cfg: PIRConfig) -> int:
+        return 2
+
+    def query_gen(self, rng, index, cfg):
+        rounds = PRG_ROUNDS[cfg.prf]
+        return dpf.gen_keys(rng, index, cfg.log_n, rounds=rounds)
+
+    def key_specs(self, cfg, n_queries, *, party=0):
+        return _dpf_key_specs(cfg, n_queries, party=party, with_payload=False)
+
+    def answer_local(self, db_local, keys_local, start_block, log_local,
+                     plan):
+        if plan.expand == "materialize":
+            # Phase ②③ then ④⑤: Eval bits out, then the select-XOR scan.
+            bits = dpf.eval_bits_batch(keys_local, start_block, log_local)
+            return _xor_scan(db_local, bits, plan)
+        if plan.expand == "fused":
+            return _fused_xor_answer(db_local, keys_local, start_block,
+                                     log_local, plan, _bits_of_key)
+        raise ValueError(f"unknown expand {plan.expand!r}")
+
+
+def _bits_of_key(key: dpf.DPFKey, block, log_range: int) -> jax.Array:
+    """Selection bits of one plain DPF key over one leaf block."""
+    _, t = dpf.eval_range(key, block, log_range)
+    return dpf.leaf_bits(t)
+
+
+def _fused_xor_answer(db_local, keys_local, start_block, log_local, plan,
+                      bits_fn) -> jax.Array:
+    """Chunked expand+scan (lax.scan over subtree blocks): per chunk,
+    descend to the chunk subtree root and fold its rows immediately — the
+    selection bits never round-trip through HBM."""
+    rows_local = db_local.shape[0]
+    words = db_local.shape[1]
+    n_chunks = max(1, rows_local >> plan.chunk_log)
+    clog = min(plan.chunk_log, log_local)
+    db_c = db_local.reshape(n_chunks, rows_local // n_chunks, words)
+
+    def one_query(key):
+        def body(acc, c):
+            blk = start_block * n_chunks + c
+            bits = bits_fn(key, blk, clog)
+            acc = acc ^ dpxor(db_c[c], bits)
+            return acc, ()
+        acc0 = jnp.zeros((words,), U32)
+        acc, _ = jax.lax.scan(body, acc0,
+                              jnp.arange(n_chunks, dtype=jnp.uint32))
+        return acc
+
+    return jax.vmap(one_query)(keys_local)
+
+
+# ---------------------------------------------------------------------------
+# additive-dpf-2: Z_256 shares -> one int8 GEMM per batch (beyond-paper)
+# ---------------------------------------------------------------------------
+
+class AdditiveDpf2(PIRProtocol):
+    """Two-server additive PIR: Z_256 byte shares, batched-query GEMM.
+
+    A batch of Q queries against one DB shard is one int8 matrix product
+    ``shares[Q, R] x db[R, L]`` — the DB is read once per *batch*, not per
+    query, multiplying operational intensity by Q (DESIGN.md §2,
+    kernels/pir_matmul.py). Answers are int32 byte-columns; only their
+    value mod 256 matters, so int32 wraparound preserves it.
+    """
+
+    name = "additive-dpf-2"
+    share_kind = "additive"
+
+    def n_parties(self, cfg: PIRConfig) -> int:
+        return 2
+
+    def query_gen(self, rng, index, cfg):
+        rounds = PRG_ROUNDS[cfg.prf]
+        return dpf.gen_keys(
+            rng, index, cfg.log_n,
+            payload=np.array([1], np.uint32), payload_mod=256, rounds=rounds,
+        )
+
+    def key_specs(self, cfg, n_queries, *, party=0):
+        return _dpf_key_specs(cfg, n_queries, party=party, with_payload=True)
+
+    def answer_local(self, db_local, keys_local, start_block, log_local,
+                     plan):
+        shares = dpf.eval_bytes_batch(keys_local, start_block, log_local)
+        db_bytes = _words_to_bytes_i8(db_local)
+        if plan.scan == "pallas":
+            from repro.kernels import ops
+            return ops.pir_gemm(shares.astype(jnp.int8), db_bytes)
+        return answer_additive_matmul(db_bytes, shares)
+
+    def reduce(self, partial_res, axis, n_shards, plan):
+        return jax.lax.psum(partial_res, axis)   # additive: native psum
+
+    def reconstruct(self, answers):
+        acc = answers[0].astype(jnp.int32)
+        for a in answers[1:]:
+            acc = acc + a.astype(jnp.int32)
+        return (acc % 256).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# xor-dpf-k: k >= 2 servers, k-of-k XOR shares (beyond-paper)
+# ---------------------------------------------------------------------------
+
+class XorDpfK(_XorProtocol):
+    """k-server XOR PIR: one DPF pair blinded by a ring of shared masks.
+
+    Construction (1-private, k-of-k reconstruct; DESIGN.md §7.2): draw
+    mask seeds s_0..s_{k-1}; party i expands masks m(s_i) and
+    m(s_{(i+1) mod k}) — plain (correction-free) GGM trees, so two parties
+    holding the same seed derive the *same* pseudorandom selection vector.
+    Parties 0 and 1 additionally hold the real DPF pair (d_0, d_1) for the
+    queried index. Each seed appears at exactly two parties, so the XOR of
+    all k selection vectors is Eval(d_0) ^ Eval(d_1) = e_alpha, while any
+    single party sees only a DPF key and/or fresh random seeds — nothing
+    about alpha. Every party's vector is dense pseudorandom, so all k
+    servers do identical full-scan work (no idle replicas).
+
+    Per-party keys are batched ``DPFKey`` pytrees with a leading *component*
+    axis (3 components for parties 0/1: real key + two masks; 2 for the
+    rest), evaluated per component and XOR-folded. k=2 degenerates to the
+    two-server scheme (the shared masks cancel pairwise).
+    """
+
+    name = "xor-dpf-k"
+
+    def n_parties(self, cfg: PIRConfig) -> int:
+        if cfg.n_servers < 2:
+            raise ValueError(f"xor-dpf-k needs n_servers >= 2, "
+                             f"got {cfg.n_servers}")
+        return cfg.n_servers
+
+    @staticmethod
+    def _n_components(party: int) -> int:
+        return 3 if party < 2 else 2
+
+    def query_gen(self, rng, index, cfg):
+        k = self.n_parties(cfg)
+        rounds = PRG_ROUNDS[cfg.prf]
+        log_n = cfg.log_n
+        d0, d1 = dpf.gen_keys(rng, index, log_n, rounds=rounds)
+        seeds = [rng.integers(0, 1 << 32, size=4, dtype=np.uint32)
+                 for _ in range(k)]
+        zero_cw = jnp.zeros((log_n, 4), U32)
+        zero_t = jnp.zeros((log_n, 2), U32)
+
+        def mask_key(seed: np.ndarray) -> dpf.DPFKey:
+            # zero correction words make eval_range a plain GGM PRG tree:
+            # its leaf t-bits depend only on the seed, so both holders of a
+            # seed derive identical (cancelling) masks.
+            return dpf.DPFKey(party=0, log_n=log_n,
+                              root_seed=jnp.asarray(seed),
+                              cw_seed=zero_cw, cw_t=zero_t,
+                              cw_final=None, rounds=rounds)
+
+        keys = []
+        for i in range(k):
+            comps = [d0] if i == 0 else [d1] if i == 1 else []
+            comps.append(mask_key(seeds[i]))
+            comps.append(mask_key(seeds[(i + 1) % k]))
+            # aux party must agree across stacked components
+            comps = [replace_party(c, i) for c in comps]
+            keys.append(dpf.stack_keys(comps))
+        return tuple(keys)
+
+    def key_specs(self, cfg, n_queries, *, party=0):
+        return _dpf_key_specs(cfg, n_queries, party=party,
+                              with_payload=False,
+                              components=self._n_components(party))
+
+    def answer_local(self, db_local, keys_local, start_block, log_local,
+                     plan):
+        if plan.expand == "materialize":
+            bits = _component_bits_batch(keys_local, start_block, log_local)
+            return _xor_scan(db_local, bits, plan)
+        if plan.expand == "fused":
+            return _fused_xor_answer(db_local, keys_local, start_block,
+                                     log_local, plan, _component_bits)
+        raise ValueError(f"unknown expand {plan.expand!r}")
+
+
+def replace_party(key: dpf.DPFKey, party: int) -> dpf.DPFKey:
+    """A key with its (aux) party id rewritten.
+
+    The party id never enters mask evaluation (with zero correction words
+    the initial t-bit multiplies nothing), but pytree aux data must agree
+    for components to stack and for ``key_specs`` treedefs to match.
+    """
+    return dpf.DPFKey(party=party, log_n=key.log_n,
+                      root_seed=key.root_seed, cw_seed=key.cw_seed,
+                      cw_t=key.cw_t, cw_final=key.cw_final,
+                      rounds=key.rounds)
+
+
+def _component_bits(key: dpf.DPFKey, block, log_range: int) -> jax.Array:
+    """XOR-fold of one query's component keys' selection bits (leaves [C,...])."""
+    bs = jax.vmap(lambda c: _bits_of_key(c, block, log_range))(key)
+    return xor_fold(bs, 0)
+
+
+@partial(jax.jit, static_argnames=("log_range",))
+def _component_bits_batch(keys: dpf.DPFKey, start_block, log_range: int
+                          ) -> jax.Array:
+    """[Q, C, ...] component keys -> [Q, 2^log_range] folded selection bits.
+
+    jit'd (mirroring ``dpf.eval_bytes_batch``): the doubly-vmapped GGM walk
+    is minutes of eager dispatch overhead otherwise.
+    """
+    return jax.vmap(lambda k: _component_bits(k, start_block, log_range))(keys)
+
+
+register(XorDpf2())
+register(AdditiveDpf2())
+register(XorDpfK())

@@ -12,25 +12,25 @@ Topology mapping (DESIGN.md §2):
 Per-device step (inside shard_map) — Algorithm 1 with the host CPU removed:
 
   ① eval own DPF leaf range   (paper: host CPU + CPU→DPU copy ②③)
-  ② select-XOR scan over the local DB rows            (paper: DPU dpXOR ④)
-  ③ XOR all-reduce of 32 B subresults over `model`    (paper: DPU→CPU copy
-     + host aggregation ⑤⑥ — here an all_gather+fold or a ppermute
-     butterfly, selectable for the §Perf collective study)
+  ② select-XOR scan / GEMM over the local DB rows      (paper: DPU dpXOR ④)
+  ③ reduce 32 B subresults over `model`                (paper: DPU→CPU copy
+     + host aggregation ⑤⑥)
 
-Three server paths, lowered from the same factory:
-
-  baseline   paper-faithful phase split: materialize Eval(k,·) bits, then
-             scan. This is the §Perf *baseline* row.
-  fused      chunked expand+scan (lax.scan over subtree blocks): selection
-             bits never round-trip through HBM. Beyond-paper.
-  matmul     batched queries as one int8 GEMM on the MXU (additive mode).
-             Beyond-paper; turns the memory-bound scan compute-bound.
+What runs in steps ①–③ is no longer decided here: the *protocol plane*
+(``core/protocol.py``) owns it. A registered ``PIRProtocol`` supplies the
+per-shard answer contraction (``answer_local``), the cross-shard reduction
+algebra (``reduce`` — XOR all-reduce for the XOR schemes, psum for
+additive), and the key pytree shapes (``key_specs``); an ``ExecutionPlan``
+picks the kernel path (materialized vs fused expansion, jnp oracle vs the
+Pallas bodies, gather vs butterfly collective). This module only owns the
+mesh plumbing: shard_map specs, the lower-once-per-bucket compile cache,
+and DB placement. Legacy ``path="baseline"|"fused"|"matmul"`` strings map
+onto plans via ``protocol.resolve_plan``.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from functools import partial
 from typing import Callable, Optional, Sequence, Tuple
 
 import jax
@@ -41,8 +41,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 from repro.config import PIRConfig
 from repro.core import dpf
-from repro.core.pir import dpxor, xor_fold
-from repro.crypto.chacha import PRG_ROUNDS
+from repro.core import protocol as protocol_mod
+from repro.core.protocol import ExecutionPlan, PIRProtocol
 
 U32 = jnp.uint32
 
@@ -63,53 +63,26 @@ def _axis_size(mesh, names) -> int:
     return n
 
 
-def key_specs(cfg: PIRConfig, n_queries: int, *, party: int = 0
-              ) -> dpf.DPFKey:
+def key_specs(cfg: PIRConfig, n_queries: int, *, party: int = 0,
+              protocol: Optional[PIRProtocol] = None) -> dpf.DPFKey:
     """ShapeDtypeStruct stand-ins for a batched key pytree (dry-run input).
 
+    Delegates to the config's protocol — key pytree shapes (payload
+    correction words, the k-server component axis) are scheme-defined.
     ``party`` and the PRG round count are pytree *aux data*, so they must
     match the real keys exactly for treedef-sensitive uses (e.g. the
     per-bucket ``jit`` in_shardings).
     """
-    log_n = cfg.log_n
-    mk = lambda *s: jax.ShapeDtypeStruct((n_queries,) + s, np.uint32)
-    cw_final = None if cfg.mode == "xor" else mk(1)
-    return dpf.DPFKey(
-        party=party, log_n=log_n,
-        root_seed=mk(4), cw_seed=mk(log_n, 4), cw_t=mk(log_n, 2),
-        cw_final=cw_final, rounds=PRG_ROUNDS.get(cfg.prf, 12),
-    )
+    proto = protocol if protocol is not None else protocol_mod.for_config(cfg)
+    return proto.key_specs(cfg, n_queries, party=party)
 
 
-def _key_pspec(keys_like: dpf.DPFKey, cluster: Tuple[str, ...]) -> dpf.DPFKey:
+def _key_pspec(keys_like, cluster: Tuple[str, ...]):
     """PartitionSpecs matching the batched-key pytree (batch axis sharded)."""
     def spec(leaf):
         rank = len(leaf.shape)
         return P(cluster, *([None] * (rank - 1)))
     return jax.tree_util.tree_map(spec, keys_like)
-
-
-def xor_allreduce_gather(partial_res: jax.Array, axis: str) -> jax.Array:
-    """XOR all-reduce via all_gather + local fold (paper's host aggregation)."""
-    gathered = jax.lax.all_gather(partial_res, axis)          # [P, ...]
-    return xor_fold(gathered, 0)
-
-
-def xor_allreduce_butterfly(partial_res: jax.Array, axis: str, size: int
-                            ) -> jax.Array:
-    """XOR all-reduce via a recursive-doubling butterfly (log P ppermutes).
-
-    Collective-study alternative for §Perf: moves the same bytes in log P
-    rounds of pairwise exchange instead of one P-way gather.
-    """
-    x = partial_res
-    n = size
-    shift = 1
-    while shift < n:
-        perm = [(i, i ^ shift) for i in range(n)]
-        x = x ^ jax.lax.ppermute(x, axis, perm)
-        shift <<= 1
-    return x
 
 
 @dataclass
@@ -120,6 +93,8 @@ class ServeFns:
     db_sharding: NamedSharding
     cfg: PIRConfig
     n_local_queries: int       # queries per cluster per step
+    plan: ExecutionPlan
+    protocol: PIRProtocol
     # batched-key pytree -> NamedSharding pytree (for async host staging)
     key_shardings: Optional[Callable] = None
 
@@ -129,11 +104,31 @@ def build_serve_fn(
     mesh: jax.sharding.Mesh,
     *,
     n_queries: int,
-    path: str = "baseline",          # baseline | fused | matmul
-    chunk_log: int = 12,             # fused: leaves per expand+scan chunk
-    collective: str = "gather",      # gather | butterfly
+    path: Optional[str] = "baseline",  # legacy plan names; None/"auto" selects
+    chunk_log: int = 12,               # fused: leaves per expand+scan chunk
+    collective: str = "gather",        # gather | butterfly
+    protocol: Optional[PIRProtocol] = None,
+    plan: Optional[ExecutionPlan] = None,
 ) -> ServeFns:
-    """Build the sharded serve function for one step of ``n_queries``."""
+    """Build the sharded serve function for one step of ``n_queries``.
+
+    The protocol defaults to the one named by ``cfg.protocol``; the plan
+    defaults to the legacy ``path`` mapping (or ``plan_for`` selection when
+    ``path`` is None/"auto"). No share-scheme branching happens here — the
+    protocol owns the contraction and reduction.
+    """
+    proto = protocol if protocol is not None else protocol_mod.for_config(cfg)
+    if path == "matmul" and proto.share_kind != "additive":
+        # the GEMM path contracts additive Z_256 shares; silently falling
+        # back to the XOR scan would mislabel benchmarks/tests
+        raise ValueError(
+            f"path='matmul' requires an additive protocol; "
+            f"{proto.name!r} is {proto.share_kind} — use "
+            f"protocol='additive-dpf-2'")
+    if plan is None:
+        plan = protocol_mod.resolve_plan(path, cfg, n_queries,
+                                         chunk_log=chunk_log,
+                                         collective=collective)
     cluster = _cluster_axes(mesh)
     shard = _shard_axis(mesh)
     n_clusters = _axis_size(mesh, cluster)
@@ -146,7 +141,6 @@ def build_serve_fn(
     log_local = int(math.log2(rows_local))
     if 1 << log_local != rows_local:
         raise ValueError("per-shard row count must be a power of two")
-    words = cfg.item_bytes // 4
 
     db_spec = P(shard, None)
     keys_spec_builder = lambda keys: _key_pspec(keys, cluster)
@@ -154,55 +148,12 @@ def build_serve_fn(
 
     def local_step(db_local, keys_local):
         sidx = jax.lax.axis_index(shard) if shard else 0
-
-        if path == "baseline":
-            # Phase ②③: materialize selection bits for the local leaf range
-            # (the paper's host-side Eval + CPU→DPU share copy).
-            bits = dpf.eval_bits_batch(keys_local, sidx, log_local)
-            # Phase ④⑤: select-XOR scan (DPU dpXOR, two-stage reduction).
-            partial_res = jax.vmap(lambda b: dpxor(db_local, b))(bits)
-
-        elif path == "fused":
-            # Chunked expand+scan: per chunk, descend to the chunk subtree
-            # and fold its rows immediately — bits never hit HBM.
-            n_chunks = max(1, rows_local >> chunk_log)
-            clog = min(chunk_log, log_local)
-            db_c = db_local.reshape(n_chunks, rows_local // n_chunks, words)
-
-            def one_query(key):
-                def body(acc, c):
-                    blk = sidx * n_chunks + c
-                    _, t = dpf.eval_range(key, blk, clog)
-                    acc = acc ^ dpxor(db_c[c], t)
-                    return acc, ()
-                acc0 = jnp.zeros((words,), U32)
-                acc, _ = jax.lax.scan(body, acc0, jnp.arange(n_chunks, dtype=jnp.uint32))
-                return acc
-
-            partial_res = jax.vmap(one_query)(keys_local)
-
-        elif path == "matmul":
-            # Additive Z_256 shares -> one int8 GEMM for the whole batch.
-            shares = dpf.eval_bytes_batch(keys_local, sidx, log_local)
-            db_bytes = _words_to_bytes_i8(db_local)
-            part = jax.lax.dot_general(
-                shares.astype(jnp.int8), db_bytes,
-                (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32,
-            )
-            if shard:
-                part = jax.lax.psum(part, shard)     # additive: native psum
-            return part
-
-        else:
-            raise ValueError(f"unknown path {path!r}")
-
-        # Aggregation ⑤⑥: XOR all-reduce of 32 B subresults over shards.
+        # ①② the protocol's per-shard contraction under the chosen plan
+        partial_res = proto.answer_local(db_local, keys_local, sidx,
+                                         log_local, plan)
+        # ③ aggregation ⑤⑥ over DB shards, in the protocol's share algebra
         if shard:
-            if collective == "butterfly":
-                partial_res = xor_allreduce_butterfly(partial_res, shard, n_shards)
-            else:
-                partial_res = xor_allreduce_gather(partial_res, shard)
+            partial_res = proto.reduce(partial_res, shard, n_shards, plan)
         return partial_res
 
     def serve(db, keys):
@@ -214,7 +165,7 @@ def build_serve_fn(
         )
         return fn(db, keys)
 
-    def key_shardings(keys_like: dpf.DPFKey):
+    def key_shardings(keys_like):
         """NamedSharding pytree for a batched key pytree (host staging)."""
         return jax.tree_util.tree_map(
             lambda s: NamedSharding(mesh, s), _key_pspec(keys_like, cluster),
@@ -226,14 +177,10 @@ def build_serve_fn(
         db_sharding=NamedSharding(mesh, db_spec),
         cfg=cfg,
         n_local_queries=n_queries // max(n_clusters, 1),
+        plan=plan,
+        protocol=proto,
         key_shardings=key_shardings,
     )
-
-
-def _words_to_bytes_i8(w: jax.Array) -> jax.Array:
-    sh = jnp.asarray([0, 8, 16, 24], dtype=U32)
-    b = (w[..., None] >> sh) & U32(0xFF)
-    return b.reshape(w.shape[:-1] + (w.shape[-1] * 4,)).astype(jnp.int8)
 
 
 def bucket_for(buckets: Sequence[int], n: int) -> int:
@@ -270,14 +217,18 @@ class BucketedServeFns:
     """Lower-once-per-bucket cache of compiled serve steps for one party.
 
     Ragged traffic never recompiles: a batch of Q queries is padded up to
-    the smallest bucket >= Q (``dpf.pad_keys``) and answered by that
+    the smallest bucket >= Q (``PIRProtocol.pad``) and answered by that
     bucket's cached ``jax.jit`` step. ``n_compiles`` counts cache misses so
-    tests/benches can assert reuse.
+    tests/benches can assert reuse. When ``path`` is None, each bucket's
+    plan is chosen by ``protocol.plan_for`` — so e.g. small and large
+    buckets of the same server family may take different kernel paths.
     """
 
     def __init__(self, cfg: PIRConfig, mesh: jax.sharding.Mesh, *,
-                 buckets: Sequence[int], path: str = "baseline",
-                 collective: str = "gather", party: int = 0):
+                 buckets: Sequence[int], path: Optional[str] = "baseline",
+                 collective: str = "gather", party: int = 0,
+                 protocol: Optional[PIRProtocol] = None,
+                 chunk_log: int = 12):
         n_clusters = _axis_size(mesh, _cluster_axes(mesh))
         for b in buckets:
             if b % max(n_clusters, 1):
@@ -287,7 +238,10 @@ class BucketedServeFns:
         self.mesh = mesh
         self.path = path
         self.collective = collective
+        self.chunk_log = chunk_log
         self.party = party
+        self.protocol = (protocol if protocol is not None
+                         else protocol_mod.for_config(cfg))
         self.buckets = tuple(sorted(set(buckets)))
         self.n_compiles = 0
         self._cache: dict = {}   # bucket -> (ServeFns, jitted serve)
@@ -298,18 +252,21 @@ class BucketedServeFns:
     def fns_for(self, bucket: int) -> Tuple[ServeFns, Callable]:
         if bucket not in self._cache:
             fns = build_serve_fn(self.cfg, self.mesh, n_queries=bucket,
-                                 path=self.path, collective=self.collective)
+                                 path=self.path, collective=self.collective,
+                                 chunk_log=self.chunk_log,
+                                 protocol=self.protocol)
             # explicit in_shardings: host-resident and pre-staged
             # (device_put) key batches hit the SAME executable — without
             # this, staging would silently fork a second ~identical
             # compile per bucket (observed +70 s on the dev container)
-            keys_like = key_specs(self.cfg, bucket, party=self.party)
+            keys_like = self.protocol.key_specs(self.cfg, bucket,
+                                                party=self.party)
             in_sh = (fns.db_sharding, fns.key_shardings(keys_like))
             self._cache[bucket] = (fns, jax.jit(fns.serve, in_shardings=in_sh))
             self.n_compiles += 1
         return self._cache[bucket]
 
-    def stage(self, keys: dpf.DPFKey) -> dpf.DPFKey:
+    def stage(self, keys) -> dpf.DPFKey:
         """Pad a batched key pytree to its bucket and device_put it.
 
         This is the host-side half of the double-buffered serve pipeline:
@@ -317,23 +274,23 @@ class BucketedServeFns:
         Batches larger than the largest bucket pass through unstaged —
         ``answer`` chunks (and pads per chunk) at dispatch.
         """
-        if dpf.n_queries_of(keys) > self.buckets[-1]:
+        if self.protocol.n_queries(keys) > self.buckets[-1]:
             return keys
-        bucket = self.bucket_for(dpf.n_queries_of(keys))
+        bucket = self.bucket_for(self.protocol.n_queries(keys))
         fns, _ = self.fns_for(bucket)
-        padded = dpf.pad_keys(keys, bucket)
+        padded = self.protocol.pad(keys, bucket)
         if fns.key_shardings is not None:
             padded = jax.device_put(padded, fns.key_shardings(padded))
         return padded
 
-    def answer(self, db: jax.Array, keys: dpf.DPFKey) -> jax.Array:
-        """Answer a batch of any size; returns exactly [Q, W] shares.
+    def answer(self, db: jax.Array, keys) -> jax.Array:
+        """Answer a batch of any size; returns exactly [Q, ...] shares.
 
         Q pads up to its bucket (pad answers computed and sliced off);
         batches beyond the largest bucket are chunked. The result is
         asynchronous (no block until the caller consumes it).
         """
-        q = dpf.n_queries_of(keys)
+        q = self.protocol.n_queries(keys)
         max_b = self.buckets[-1]
         if q <= max_b:
             return self._answer_one(db, keys)
@@ -344,11 +301,11 @@ class BucketedServeFns:
             chunks.append(self._answer_one(db, part))
         return jnp.concatenate(chunks, axis=0)
 
-    def _answer_one(self, db: jax.Array, keys: dpf.DPFKey) -> jax.Array:
-        q = dpf.n_queries_of(keys)
+    def _answer_one(self, db: jax.Array, keys) -> jax.Array:
+        q = self.protocol.n_queries(keys)
         bucket = self.bucket_for(q)
         _, jitted = self.fns_for(bucket)
-        return jitted(db, dpf.pad_keys(keys, bucket))[:q]
+        return jitted(db, self.protocol.pad(keys, bucket))[:q]
 
 
 class PIRServer:
@@ -357,7 +314,8 @@ class PIRServer:
     Owns the device-resident DB shards and a *family* of compiled serve
     steps, one per batch bucket (lower-once-per-bucket). The DB is
     preloaded once (paper §3.3 "database preloading": transfer cost excluded
-    from query latency) and donated to devices.
+    from query latency) and donated to devices. The share scheme comes from
+    the injected ``PIRProtocol`` (default: the one ``cfg.protocol`` names).
     """
 
     def __init__(
@@ -368,9 +326,10 @@ class PIRServer:
         mesh: jax.sharding.Mesh,
         *,
         n_queries: int = 32,
-        path: str = "baseline",
+        path: Optional[str] = "baseline",
         collective: str = "gather",
         buckets: Optional[Sequence[int]] = None,
+        protocol: Optional[PIRProtocol] = None,
     ):
         self.party = party
         self.cfg = cfg
@@ -384,7 +343,8 @@ class PIRServer:
             buckets = tuple(sorted(set(buckets) | {n_queries}))
         self.bucketed = BucketedServeFns(
             cfg, mesh, buckets=buckets, path=path, collective=collective,
-            party=party)
+            party=party, protocol=protocol)
+        self.protocol = self.bucketed.protocol
         self.n_queries = n_queries
         self.fns = self.bucketed.fns_for(n_queries)[0]
         self.db = jax.device_put(jnp.asarray(db_words), self.fns.db_sharding)
@@ -397,22 +357,22 @@ class PIRServer:
     def buckets(self) -> Tuple[int, ...]:
         return self.bucketed.buckets
 
-    def stage_keys(self, keys: dpf.DPFKey) -> dpf.DPFKey:
+    def stage_keys(self, keys) -> dpf.DPFKey:
         """Pad + device_put a key batch ahead of dispatch (pipelining)."""
         return self.bucketed.stage(keys)
 
-    def answer(self, keys: dpf.DPFKey) -> jax.Array:
+    def answer(self, keys) -> jax.Array:
         """Answer a batch of queries (keys stacked on the leading axis).
 
         Any batch size works: Q is padded up to its bucket (answers for pad
         slots are computed and discarded) and batches beyond the largest
-        bucket are chunked. Returns exactly [Q, W] answer shares.
+        bucket are chunked. Returns exactly [Q, ...] answer shares.
         """
         return self.bucketed.answer(self.db, keys)
 
     def lower(self, n_queries: int):
         """Lower (no execution) against ShapeDtypeStructs — dry-run entry."""
-        keys = key_specs(self.cfg, n_queries)
+        keys = self.protocol.key_specs(self.cfg, n_queries, party=self.party)
         db_spec = jax.ShapeDtypeStruct(
             (self.cfg.n_items, self.cfg.item_bytes // 4), np.uint32
         )

@@ -155,8 +155,9 @@ def lower_pir_cell(pir_name: str, multi_pod: bool, *, path: str = "fused",
     from repro.core.server import PIRServer, build_serve_fn, key_specs
     mesh = make_production_mesh(multi_pod=multi_pod)
     cfg = PIR_CONFIGS[pir_name]
-    if path == "matmul" and cfg.mode != "additive":
-        cfg = dataclasses.replace(cfg, mode="additive")
+    if path == "matmul" and cfg.protocol != "additive-dpf-2":
+        # the GEMM path contracts additive Z_256 shares
+        cfg = dataclasses.replace(cfg, protocol="additive-dpf-2")
     n_chips = 512 if multi_pod else 256
     t0 = time.time()
     with mesh:

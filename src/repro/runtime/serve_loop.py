@@ -10,8 +10,9 @@ Pipeline stages (paper §3.4):
      holding a full DB replica sharded over `model`) round-robin
   ④ a double-buffered dispatch loop stages batch k+1's key pytree onto
      devices while batch k executes (host staging ∥ device compute)
-  ⑤ answers return to the client through per-query futures; the two
-     parties' shares are reconciled off the dispatch critical path
+  ⑤ answers return to the client through per-query futures; all k
+     parties' shares are reconciled (``PIRProtocol.reconstruct``) off the
+     dispatch critical path
 
 Straggler mitigation: per-cluster latency EWMA; a flagged cluster's queued
 work is re-sharded onto healthy clusters (``StragglerMonitor.shed_stragglers``,
@@ -33,6 +34,8 @@ import numpy as np
 
 from repro.config import PIRConfig
 from repro.core import dpf, pir
+from repro.core import protocol as protocol_mod
+from repro.core.protocol import PIRProtocol
 from repro.core.server import PIRServer, bucket_for
 from repro.runtime.fault import StragglerMonitor
 
@@ -126,7 +129,7 @@ class QueryScheduler:
     """Dynamic batcher + double-buffered dispatcher over cluster lanes.
 
     Parameterized by four callables so the same engine serves one party
-    (share answering) or a two-party deployment (XOR reconciliation):
+    (share answering) or a k-party deployment (share reconciliation):
 
       collate(items)        stack raw per-query payloads -> batched pytree
       stage(payload)        pad to bucket + device_put (overlaps compute)
@@ -177,15 +180,25 @@ class QueryScheduler:
         self._rr = 0                          # round-robin lane counter
         self._thread: Optional[threading.Thread] = None
         self._stopping = False
+        self._closed = False                  # terminal: set by stop()/death
 
     # ------------------------------------------------------------------
     # intake
     # ------------------------------------------------------------------
 
     def submit(self, item: Any) -> AnswerFuture:
-        """Enqueue one query payload; returns its future."""
+        """Enqueue one query payload; returns its future.
+
+        Raises ``RuntimeError`` once the session is closed (``stop()`` was
+        called on a running session, or its thread died) — enqueueing into
+        a dead loop would leave the future unresolved forever.
+        """
         fut = AnswerFuture()
         with self._cv:
+            if self._closed:
+                raise RuntimeError(
+                    "QueryScheduler is stopped; submit() after stop()/close()"
+                    " would never be answered")
             self._pending.append((item, fut, self.clock()))
             if len(self._pending) >= self.buckets[-1]:
                 self._cut_locked(self.buckets[-1])
@@ -307,22 +320,46 @@ class QueryScheduler:
         return self._thread is not None and self._thread.is_alive()
 
     def start(self):
+        """Run the dispatch loop as a background session thread.
+
+        Reopens a stopped (or dead) session: the closed flag is cleared,
+        so submit() works again until the next stop().
+        """
         if self.running:
             return
-        self._stopping = False
+        with self._cv:
+            self._closed = False
+            self._stopping = False
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="pir-scheduler")
         self._thread.start()
 
     def stop(self):
-        """Flush, answer everything in flight, then join the thread."""
-        if not self.running:
-            return
+        """Flush, answer everything in flight, then join the thread.
+
+        Terminal for the session: subsequent :meth:`submit` calls raise
+        (``pump`` remains callable and is a no-op on the drained queues).
+        A scheduler that was never started is untouched — the synchronous
+        submit-then-pump mode stays available.
+        """
         with self._cv:
+            # snapshot under the lock: a concurrent stop() may null out
+            # self._thread between our aliveness check and the join
+            thread = self._thread
+            if thread is None or not thread.is_alive():
+                return
+            # closed BEFORE the join: a submit racing with stop() must
+            # raise, not slip into the queue after the drain check and
+            # hang its client forever
+            self._closed = True
             self._stopping = True
             self._cv.notify()
-        self._thread.join()
-        self._thread = None
+        thread.join()
+        with self._cv:
+            # a concurrent start() may have installed a fresh session
+            # thread meanwhile — only clear our own dead one
+            if self._thread is thread:
+                self._thread = None
 
     def _run(self):
         inflight: deque = deque()
@@ -363,6 +400,7 @@ class QueryScheduler:
                 if not fut.done():
                     fut.set_exception(exc)
         with self._cv:
+            self._closed = True      # dead session: reject future submits
             for lane in self.queues.values():
                 for batch in lane:
                     for fut in batch.futures:
@@ -436,10 +474,17 @@ class PIRServeLoop:
             f"cluster{self.stats.batches % max(self.n_clusters, 1)}", dt)
 
 
-class TwoServerPIR:
-    """End-to-end two-party deployment: client + two non-colluding servers.
+class MultiServerPIR:
+    """End-to-end k-party deployment: client + k non-colluding servers.
 
-    Both servers run the same binary on disjoint meshes in production; on
+    The facade over the protocol plane (``core/protocol.py``): the injected
+    ``PIRProtocol`` (default: the one ``cfg.protocol`` names) decides the
+    party count, per-party key generation, and reconstruction; one
+    :class:`PIRServer` per party owns that party's DB replica and compiled
+    step family; one :class:`QueryScheduler` coalesces all clients' queries
+    and fans every batch out to all k parties.
+
+    All servers run the same binary on disjoint meshes in production; on
     this container they share the device but keep separate DB buffers and
     compiled steps, preserving the protocol structure exactly.
 
@@ -450,49 +495,65 @@ class TwoServerPIR:
       submit(index)    streaming session form: returns an
                        :class:`AnswerFuture`; the scheduler coalesces
                        concurrent clients' queries into padded bucket
-                       batches and reconciles both parties' answer shares
+                       batches and reconciles all parties' answer shares
                        asynchronously. Call :meth:`start` for a background
                        session (or rely on ``query``/``pump``).
     """
 
     def __init__(self, db_words: np.ndarray, cfg: PIRConfig, mesh,
-                 *, path: str = "fused", n_queries: int = 4,
+                 *, path: Optional[str] = "fused", n_queries: int = 4,
                  buckets: Optional[Sequence[int]] = None,
                  max_wait_s: float = DEFAULT_MAX_WAIT_S,
-                 n_clusters: int = 1):
+                 n_clusters: int = 1,
+                 protocol: Optional[PIRProtocol] = None,
+                 client_rng: Optional[np.random.Generator] = None):
         self.cfg = cfg
+        self.protocol = (protocol if protocol is not None
+                         else protocol_mod.for_config(cfg))
+        self.n_parties = self.protocol.n_parties(cfg)
         self.servers = [
             PIRServer(party=b, db_words=db_words, cfg=cfg, mesh=mesh,
-                      n_queries=n_queries, path=path, buckets=buckets)
-            for b in (0, 1)
+                      n_queries=n_queries, path=path, buckets=buckets,
+                      protocol=self.protocol)
+            for b in range(self.n_parties)
         ]
-        self.rng = np.random.default_rng(0)
+        # key material (DPF keys, xor-dpf-k mask seeds) must not be
+        # replayable: default to OS entropy; inject a seeded Generator
+        # only for deterministic tests/benches
+        self.rng = (client_rng if client_rng is not None
+                    else np.random.default_rng())
         self._lock = threading.Lock()
+        # first dispatch compiles one serve step per party (~1 min each on
+        # the dev container), so a cold background session needs the
+        # result deadline to scale with the party count
+        self._query_timeout_s = 120.0 * self.n_parties
         self.scheduler = self._make_scheduler(max_wait_s, n_clusters)
 
     def _make_scheduler(self, max_wait_s: float, n_clusters: int
                         ) -> QueryScheduler:
-        s0, s1 = self.servers
+        servers = self.servers
+        proto = self.protocol
+        parties = range(self.n_parties)
 
         def collate(items):
-            return (dpf.stack_keys([k0 for k0, _ in items]),
-                    dpf.stack_keys([k1 for _, k1 in items]))
+            # items: per-query tuples of per-party keys -> per-party batches
+            return tuple(dpf.stack_keys([it[p] for it in items])
+                         for p in parties)
 
         def stage(payload):
-            return (s0.stage_keys(payload[0]), s1.stage_keys(payload[1]))
+            return tuple(servers[p].stage_keys(payload[p]) for p in parties)
 
         def dispatch(staged):
-            return (s0.answer(staged[0]), s1.answer(staged[1]))
+            return tuple(servers[p].answer(staged[p]) for p in parties)
 
         def finalize(raw, n):
-            r0, r1 = raw
-            rec = np.asarray(pir.reconstruct_xor(r0[:n], r1[:n]))
+            rec = np.asarray(proto.reconstruct([r[:n] for r in raw]))
             return list(rec)
 
         return QueryScheduler(
             collate=collate, stage=stage, dispatch=dispatch,
-            finalize=finalize, buckets=s0.buckets, n_clusters=n_clusters,
-            max_wait_s=max_wait_s)
+            finalize=finalize, buckets=servers[0].buckets,
+            n_clusters=n_clusters, max_wait_s=max_wait_s)
 
     # -- streaming session API ------------------------------------------
 
@@ -511,7 +572,8 @@ class TwoServerPIR:
         self.close()
 
     def submit(self, index: int) -> AnswerFuture:
-        """Private retrieval of ``db[index]``; resolves to a [W]-word row."""
+        """Private retrieval of ``db[index]``; resolves to one record
+        (``[W]`` u32 words for the XOR protocols, bytes for additive)."""
         with self._lock:     # client-side keygen shares one rng
             q = pir.query_gen(self.rng, index, self.cfg)
         return self.scheduler.submit(q.keys)
@@ -519,10 +581,36 @@ class TwoServerPIR:
     # -- synchronous batch API ------------------------------------------
 
     def query(self, indices: Sequence[int]) -> np.ndarray:
-        """Private retrieval of ``db[indices]``; returns [Q, W] words."""
+        """Private retrieval of ``db[indices]``; returns [Q, ...] records
+        (u32 words for XOR protocols, Z_256 bytes for additive)."""
         if not indices:
-            return np.empty((0, self.cfg.item_bytes // 4), np.uint32)
+            tail, dtype = self.protocol.record_struct(self.cfg)
+            return np.empty((0,) + tail, dtype)
         futs = [self.submit(i) for i in indices]
         if not self.scheduler.running:
             self.scheduler.pump()
-        return np.stack([f.result(timeout=120.0) for f in futs])
+        return np.stack([f.result(timeout=self._query_timeout_s)
+                         for f in futs])
+
+
+class TwoServerPIR(MultiServerPIR):
+    """Backward-compatible alias: the two-party deployment.
+
+    Kept as a thin ``n_parties == 2`` facade over :class:`MultiServerPIR`
+    (the pre-protocol-plane public API). New code should construct
+    :class:`MultiServerPIR` with an explicit ``PIRConfig.protocol``.
+    """
+
+    def __init__(self, db_words: np.ndarray, cfg: PIRConfig, mesh,
+                 *args, protocol: Optional[PIRProtocol] = None, **kwargs):
+        # validate BEFORE building servers: k device-resident DB replicas
+        # are too expensive to allocate just to throw away
+        proto = (protocol if protocol is not None
+                 else protocol_mod.for_config(cfg))
+        k = proto.n_parties(cfg)
+        if k != 2:
+            raise ValueError(
+                f"TwoServerPIR requires a 2-party protocol; "
+                f"{proto.name!r} has {k} parties — use MultiServerPIR")
+        super().__init__(db_words, cfg, mesh, *args, protocol=proto,
+                         **kwargs)

@@ -351,9 +351,10 @@ def make_pir_serve_step(
     mesh: Mesh,
     *,
     buckets: Optional[Sequence[int]] = None,
-    path: str = "fused",
+    path: Optional[str] = "fused",
     collective: str = "gather",
     party: int = 0,
+    protocol=None,
 ) -> PIRStep:
     """Build the bucketed PIR answer-step family in the step-builder idiom.
 
@@ -361,7 +362,10 @@ def make_pir_serve_step(
     jit entry points with explicit shardings out. Each batch bucket lowers
     exactly once (``core.server.BucketedServeFns``); the scheduler pads
     ragged batches up to the covering bucket so odd-sized traffic never
-    triggers recompilation (DESIGN.md §6).
+    triggers recompilation (DESIGN.md §6). The share scheme comes from
+    ``protocol`` (a ``core.protocol.PIRProtocol`` or ``cfg.protocol`` by
+    default); ``path=None`` lets ``protocol.plan_for`` pick the kernel
+    path per bucket.
     """
     from repro.core.server import BucketedServeFns, default_buckets
     from repro.launch.mesh import mesh_axis_size, pir_cluster_axes
@@ -372,7 +376,8 @@ def make_pir_serve_step(
     if buckets is None:
         buckets = default_buckets(n_clusters)
     bucketed = BucketedServeFns(cfg, mesh, buckets=buckets, path=path,
-                                collective=collective, party=party)
+                                collective=collective, party=party,
+                                protocol=protocol)
     db_sharding = bucketed.fns_for(bucketed.buckets[0])[0].db_sharding
     return PIRStep(answer=bucketed.answer, stage_keys=bucketed.stage,
                    buckets=bucketed.buckets, db_sharding=db_sharding,

@@ -1,0 +1,254 @@
+"""Protocol-plane tests: registry, config shim, and oracle parity.
+
+Fast tier: everything here evaluates DPF components *eagerly* (python
+loops over ``dpf.eval_range``) or through the small interpret-mode Pallas
+kernels — no serve-step compiles (those cost ~40-70 s each on this
+container and live in the slow tier / examples).
+
+Oracle pairs:
+  * ``kernels/pir_matmul.py`` (Pallas GEMM) vs ``kernels/ref.py`` oracle;
+  * ``XorDpfK`` (k = 3) vs a pure-numpy reference: per-party selection
+    vectors XOR to the one-hot e_alpha, and numpy-folded answers XOR to
+    the DB row — while every single party's vector stays dense
+    pseudorandom (the 1-privacy sanity check);
+  * the ``pad_keys`` round-trip: pad -> answer -> slice == unpadded.
+"""
+import warnings
+
+import numpy as np
+import pytest
+from _prop import given, settings, st
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import PIRConfig
+from repro.core import dpf, pir
+from repro.core import protocol as protocol_mod
+from repro.core.protocol import (ExecutionPlan, PATH_PLANS, available,
+                                 for_config, get, plan_for, resolve_plan)
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+LOG_N = 6
+N = 1 << LOG_N
+DB = pir.make_database(np.random.default_rng(0), N, 32)
+
+
+# ---------------------------------------------------------------------------
+# registry + config shim
+# ---------------------------------------------------------------------------
+
+def test_registry_names():
+    assert {"xor-dpf-2", "additive-dpf-2", "xor-dpf-k"} <= set(available())
+    assert get("xor-dpf-2").n_parties(PIRConfig(n_items=N)) == 2
+    with pytest.raises(KeyError, match="unknown protocol"):
+        get("nope-9000")
+    # record structs drive e.g. MultiServerPIR.query([])'s empty result
+    cfg = PIRConfig(n_items=N, item_bytes=32)
+    assert get("xor-dpf-2").record_struct(cfg) == ((8,), np.uint32)
+    assert get("xor-dpf-k").record_struct(cfg) == ((8,), np.uint32)
+    assert get("additive-dpf-2").record_struct(cfg) == ((32,), np.uint8)
+
+
+def test_config_protocol_defaults_and_mode_shim():
+    import dataclasses
+    cfg = PIRConfig(n_items=N)
+    assert cfg.protocol == "xor-dpf-2" and cfg.share_kind == "xor"
+    assert cfg.mode == ""              # constructor sugar, never stored
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = PIRConfig(n_items=N, mode="additive")
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert legacy.protocol == "additive-dpf-2"
+    assert legacy.share_kind == "additive"
+    assert for_config(legacy).name == "additive-dpf-2"
+    with pytest.raises(ValueError, match="unknown PIR mode"):
+        PIRConfig(n_items=N, mode="quantum")
+    # both replace() directions keep working: protocol switches cleanly,
+    # and the pre-protocol-plane mode= idiom still wins over the carried
+    # protocol (with the deprecation warning)
+    assert dataclasses.replace(cfg, protocol="additive-dpf-2").protocol \
+        == "additive-dpf-2"
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        assert dataclasses.replace(cfg, mode="additive").protocol \
+            == "additive-dpf-2"
+        # consistent share algebra: the richer protocol name survives
+        assert PIRConfig(n_items=N, mode="xor",
+                         protocol="xor-dpf-k").protocol == "xor-dpf-k"
+
+
+def test_k_server_party_counts_and_specs():
+    cfg = PIRConfig(n_items=N, protocol="xor-dpf-k", n_servers=3)
+    proto = for_config(cfg)
+    assert proto.n_parties(cfg) == 3
+    q = pir.query_gen(RNG, 5, cfg)
+    assert len(q.keys) == 3
+    batch = pir.batch_queries(RNG, [1, 2], cfg)
+    for party in range(3):
+        spec = proto.key_specs(cfg, 2, party=party)
+        # treedef AND shapes must match real keys (per-bucket jit contract)
+        assert (jax.tree_util.tree_structure(batch[party])
+                == jax.tree_util.tree_structure(spec))
+        assert ([x.shape for x in jax.tree_util.tree_leaves(batch[party])]
+                == [x.shape for x in jax.tree_util.tree_leaves(spec)])
+    with pytest.raises(ValueError, match="n_servers"):
+        proto.n_parties(PIRConfig(n_items=N, protocol="xor-dpf-k",
+                                  n_servers=1))
+
+
+def test_plan_selection_rules():
+    # legacy path strings keep their meaning
+    assert PATH_PLANS["baseline"].expand == "materialize"
+    assert PATH_PLANS["fused"].expand == "fused"
+    plan = resolve_plan("fused", PIRConfig(n_items=N), 4, chunk_log=9,
+                        collective="butterfly")
+    assert (plan.expand, plan.chunk_log, plan.collective) == \
+        ("fused", 9, "butterfly")
+    with pytest.raises(ValueError, match="unknown path"):
+        resolve_plan("warp-drive", PIRConfig(n_items=N), 4)
+    # the GEMM path needs additive shares: XOR protocols must refuse, not
+    # silently fall back to the XOR scan (would mislabel benchmarks)
+    from repro.core.server import build_serve_fn
+    from repro.launch.mesh import make_local_mesh
+    with pytest.raises(ValueError, match="additive"):
+        build_serve_fn(PIRConfig(n_items=N), make_local_mesh(),
+                       n_queries=2, path="matmul")
+    # selector: additive -> GEMM contraction; XOR small db / single query
+    # -> materialize; XOR big db -> fused; Pallas bodies only on TPU
+    small = plan_for(PIRConfig(n_items=1 << 10), 4, backend="cpu")
+    big = plan_for(PIRConfig(n_items=1 << 20), 8, backend="cpu")
+    single = plan_for(PIRConfig(n_items=1 << 20), 1, backend="cpu")
+    assert small.expand == "materialize" and big.expand == "fused"
+    assert single.expand == "materialize"
+    assert plan_for(PIRConfig(n_items=1 << 20), 8, backend="tpu").scan \
+        == "pallas"
+    assert big.scan == "jnp"     # CPU: interpret-mode Pallas would be slow
+
+
+# ---------------------------------------------------------------------------
+# numpy reference helpers (eager per-component eval: no compiles)
+# ---------------------------------------------------------------------------
+
+def _bits_np(key: dpf.DPFKey, log_n: int) -> np.ndarray:
+    """Selection bits of one plain (component-free) DPF key."""
+    _, t = dpf.eval_range(key, 0, log_n)
+    return np.asarray(t, np.uint32)
+
+
+def _party_bits_np(party_key: dpf.DPFKey, log_n: int) -> np.ndarray:
+    """One k-server party's full selection vector (leaves ``[C, ...]``),
+    component-by-component in numpy."""
+    n_comp = party_key.root_seed.shape[0]
+    acc = np.zeros(1 << log_n, np.uint32)
+    for c in range(n_comp):
+        comp = jax.tree_util.tree_map(lambda x, c=c: x[c], party_key)
+        acc ^= _bits_np(comp, log_n)
+    return acc
+
+
+def _answer_np(db: np.ndarray, bits: np.ndarray) -> np.ndarray:
+    """numpy select-XOR oracle: ⊕_{j: bits[j]=1} db[j]."""
+    out = np.zeros(db.shape[1], np.uint32)
+    for j in np.nonzero(bits)[0]:
+        out ^= db[j]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# XorDpfK(k=3) vs the numpy reference
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, N - 1))
+def test_xor_dpf_k3_matches_numpy_reference(alpha):
+    cfg = PIRConfig(n_items=N, protocol="xor-dpf-k", n_servers=3)
+    proto = for_config(cfg)
+    keys = proto.query_gen(RNG, alpha, cfg)
+    bits = [_party_bits_np(k, LOG_N) for k in keys]
+    # k-of-k reconstruction: selection vectors XOR to e_alpha ...
+    onehot = np.zeros(N, np.uint32)
+    onehot[alpha] = 1
+    np.testing.assert_array_equal(bits[0] ^ bits[1] ^ bits[2], onehot)
+    # ... and numpy-folded answers XOR to the DB row
+    answers = [_answer_np(DB, b) for b in bits]
+    np.testing.assert_array_equal(answers[0] ^ answers[1] ^ answers[2],
+                                  DB[alpha])
+    # 1-privacy sanity: every single party's vector is dense pseudorandom
+    # (a sparse vector would leak alpha's neighbourhood)
+    for b in bits:
+        assert 0.2 < b.mean() < 0.8
+
+
+def test_xor_dpf_k2_degenerates_to_two_server():
+    """k=2: the ring masks cancel pairwise; answers equal plain 2-DPF."""
+    cfg = PIRConfig(n_items=N, protocol="xor-dpf-k", n_servers=2)
+    proto = for_config(cfg)
+    keys = proto.query_gen(np.random.default_rng(3), 42, cfg)
+    bits = [_party_bits_np(k, LOG_N) for k in keys]
+    onehot = np.zeros(N, np.uint32)
+    onehot[42] = 1
+    np.testing.assert_array_equal(bits[0] ^ bits[1], onehot)
+
+
+# ---------------------------------------------------------------------------
+# pir_matmul (Pallas) vs the jnp oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, (1 << 31) - 1))
+def test_pir_matmul_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    q, r, l = 4, 128, 32                 # grid over the reduction dim
+    s = jnp.asarray(rng.integers(-128, 128, size=(q, r), dtype=np.int8))
+    d = jnp.asarray(rng.integers(-128, 128, size=(r, l), dtype=np.int8))
+    got = ops.pir_gemm(s, d, tile_q=4, tile_r=64, tile_l=32)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.pir_matmul_ref(s, d)))
+
+
+# ---------------------------------------------------------------------------
+# pad_keys round-trip: pad -> answer -> slice == unpadded
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, N - 3))
+def test_pad_keys_roundtrip_xor2(base):
+    """Padded batches answer identically on the real slots (both parties)."""
+    cfg = PIRConfig(n_items=N)
+    idx = [base, base + 1, base + 2]                 # Q=3 -> bucket 4
+    batch = pir.batch_queries(RNG, idx, cfg)
+    def slot_answer(keys, i):
+        one = jax.tree_util.tree_map(lambda x: x[i], keys)
+        return _answer_np(DB, _bits_np(one, LOG_N))
+
+    for party in range(2):
+        padded = dpf.pad_keys(batch[party], 4)
+        assert dpf.n_queries_of(padded) == 4
+        unpadded_ans = [slot_answer(batch[party], i) for i in range(3)]
+        padded_ans = [slot_answer(padded, i) for i in range(4)]
+        # slice off the pad slot: real answers unchanged
+        for i in range(3):
+            np.testing.assert_array_equal(padded_ans[i], unpadded_ans[i])
+        # the pad slot replicates the last real key's answer
+        np.testing.assert_array_equal(padded_ans[3], unpadded_ans[2])
+
+
+def test_pad_keys_roundtrip_k3_component_axis():
+    """pad_keys pads the *query* axis of k-server component pytrees."""
+    cfg = PIRConfig(n_items=N, protocol="xor-dpf-k", n_servers=3)
+    proto = for_config(cfg)
+    batch = pir.batch_queries(RNG, [4, 9], cfg)
+    for party, key in enumerate(batch):
+        padded = proto.pad(key, 4)
+        assert proto.n_queries(padded) == 4
+        # component axis untouched; pad slots replicate the last real key
+        assert padded.root_seed.shape == (4,) + key.root_seed.shape[1:]
+        np.testing.assert_array_equal(np.asarray(padded.root_seed[3]),
+                                      np.asarray(key.root_seed[-1]))
+        bits_last = _party_bits_np(
+            jax.tree_util.tree_map(lambda x: x[1], key), LOG_N)
+        bits_pad = _party_bits_np(
+            jax.tree_util.tree_map(lambda x: x[3], padded), LOG_N)
+        np.testing.assert_array_equal(bits_pad, bits_last)

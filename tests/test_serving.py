@@ -138,6 +138,49 @@ def test_background_session_thread():
     assert sched.pump() == 0
 
 
+def test_submit_after_stop_raises():
+    """submit() on a stopped session must raise, not enqueue into a dead
+    loop (the future would otherwise never resolve)."""
+    sched, _ = make_fake_scheduler(buckets=(2,), max_wait_s=0.001)
+    sched.start()
+    fut = sched.submit(1)
+    sched.stop()
+    assert fut.result(10.0) == 2              # stop() drains in-flight work
+    with pytest.raises(RuntimeError, match="stop"):
+        sched.submit(2)
+    assert sched.pump() == 0                  # pump stays a harmless no-op
+    # start() reopens the session: submit works again, then closes again
+    sched.start()
+    fut2 = sched.submit(3)
+    sched.stop()
+    assert fut2.result(10.0) == 6
+    with pytest.raises(RuntimeError, match="stop"):
+        sched.submit(4)
+    # a never-started scheduler keeps the synchronous submit+pump mode
+    sync_sched, _ = make_fake_scheduler(buckets=(2,))
+    sync_sched.stop()                         # no-op: nothing ran yet
+    futs = [sync_sched.submit(i) for i in range(2)]
+    sync_sched.pump()
+    assert [f.result(0) for f in futs] == [0, 2]
+
+
+def test_submit_after_thread_death_raises():
+    """A dead (errored) session thread must also reject new submits."""
+    def boom(raw, n):
+        raise RuntimeError("device lost")
+    sched = QueryScheduler(collate=list, stage=lambda p: p,
+                           dispatch=lambda s: s, finalize=boom,
+                           buckets=(1,), max_wait_s=0.001)
+    sched.start()
+    with pytest.raises(RuntimeError, match="device lost"):
+        sched.submit(1).result(timeout=30.0)
+    deadline = time.monotonic() + 30.0
+    while sched.running and time.monotonic() < deadline:
+        time.sleep(0.01)                      # thread exits after _fail
+    with pytest.raises(RuntimeError, match="stop"):
+        sched.submit(2)
+
+
 def test_session_thread_death_resolves_every_future():
     """A data-plane failure must fail ALL outstanding futures, not hang
     the clients whose batches were queued behind the poisoned one."""
@@ -167,6 +210,17 @@ def test_shed_never_assigns_onto_idle_stragglers():
     assert moved == 2
     assert out["c0"] == [] and out["c1"] == []     # c0 received nothing
     assert sorted(sum((out[c] for c in ("c2", "c3", "c4")), [])) == ["a", "b"]
+
+
+def test_two_server_facade_rejects_k_party_protocols_before_building():
+    """The alias validates up front — no k DB replicas built just to
+    throw away on the ValueError."""
+    from repro.config import PIRConfig
+    from repro.launch.mesh import make_local_mesh
+    cfg = PIRConfig(n_items=1 << 6, protocol="xor-dpf-k", n_servers=3)
+    db = pir.make_database(np.random.default_rng(0), 1 << 6, 32)
+    with pytest.raises(ValueError, match="2-party"):
+        TwoServerPIR(db, cfg, make_local_mesh(), n_queries=2, buckets=(2,))
 
 
 def test_answer_future_timeout():

@@ -1,0 +1,138 @@
+"""Online-update throughput + post-publish serving vs the static baseline.
+
+The scenario the paper excludes (§3.3 freezes the DB after preloading),
+measured three ways on the database plane (DESIGN.md §8):
+
+  update     stage+publish wall time and host->device bytes for R-row
+             deltas (R = 1, 16, 256), i.e. the epoched delta path;
+  repreload  the static-system alternative for the same R rows: rebuild
+             and re-place the whole database (what a frozen-DB design
+             must do to serve new data);
+  serving    QPS through one compiled bucket before any update and after
+             a publish — the swap must not stall serving or trigger a
+             recompile (answers come off the same cached executable).
+
+The delta path wins on two axes recorded to BENCH_db.json: bytes moved
+(O(R·item_bytes) vs O(db_bytes)) and wall time per published row.
+
+Run: PYTHONPATH=src python -m benchmarks.run --only db_updates
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Csv, record_json
+from repro.config import PIRConfig
+from repro.core import pir
+from repro.db import ShardedDatabase
+from repro.launch.mesh import make_local_mesh
+from repro.runtime.serve_loop import MultiServerPIR
+
+LOG_N = 12                      # 4096 records x 32 B (CPU-container scale)
+BUCKET = 4                      # the single compiled bucket
+N_QUERIES = 32                  # queries per serving measurement
+DELTA_SIZES = (1, 16, 256)
+REPS = 3
+OUT_JSON = "BENCH_db.json"
+
+
+def _publish_delta(db: ShardedDatabase, rng, r: int) -> float:
+    rows = rng.choice(db.spec.n_items, size=r, replace=False)
+    vals = rng.integers(0, 1 << 32, size=(r, db.spec.item_words),
+                        dtype=np.uint32)
+    t0 = time.perf_counter()
+    db.stage(rows, vals)
+    db.publish()
+    jax.block_until_ready(db.view("words"))
+    return time.perf_counter() - t0
+
+
+def _repreload(host: np.ndarray, cfg, mesh, rng, r: int) -> float:
+    """Static baseline: apply the same R rows by full re-placement."""
+    rows = rng.choice(cfg.n_items, size=r, replace=False)
+    vals = rng.integers(0, 1 << 32, size=(r, cfg.item_bytes // 4),
+                        dtype=np.uint32)
+    t0 = time.perf_counter()
+    host = host.copy()                      # a frozen DB mutates on host…
+    host[rows] = vals
+    db = ShardedDatabase(host, cfg, mesh)   # …then re-preloads everything
+    jax.block_until_ready(db.view("words"))
+    return time.perf_counter() - t0
+
+
+def _qps(system: MultiServerPIR, indices) -> float:
+    t0 = time.perf_counter()
+    out = system.query(indices)
+    assert out.shape[0] == len(indices)
+    return len(indices) / (time.perf_counter() - t0)
+
+
+def run() -> Csv:
+    cfg = PIRConfig(n_items=1 << LOG_N, item_bytes=32,
+                    batch_queries=BUCKET)
+    mesh = make_local_mesh()
+    rng = np.random.default_rng(0)
+    host = pir.make_database(rng, cfg.n_items, cfg.item_bytes)
+    system = MultiServerPIR(host, cfg, mesh, path="fused",
+                            n_queries=BUCKET, buckets=(BUCKET,),
+                            client_rng=np.random.default_rng(1))
+    indices = rng.integers(0, cfg.n_items, size=N_QUERIES).tolist()
+    system.query(indices[:BUCKET])          # warm the compiled bucket
+
+    csv = Csv(["metric", "rows", "wall_ms", "rows_per_s", "h2d_bytes",
+               "qps", "label"])
+    results = {"db_bytes": cfg.db_bytes}
+
+    qps_static = _qps(system, indices)
+    csv.add("serving_pre_update", 0, 0.0, 0.0, 0, qps_static,
+            "measured-cpu")
+
+    update_cells = {}
+    for r in DELTA_SIZES:
+        walls, base_walls = [], []
+        for _ in range(REPS):
+            before = system.db.stats.update_h2d_bytes
+            walls.append(_publish_delta(system.db, rng, r))
+            delta_bytes = system.db.stats.update_h2d_bytes - before
+            base_walls.append(_repreload(host, cfg, mesh, rng, r))
+        wall = float(np.median(walls))
+        base = float(np.median(base_walls))
+        csv.add("delta_publish", r, wall * 1e3, r / wall, delta_bytes,
+                0.0, "measured-cpu")
+        csv.add("full_repreload", r, base * 1e3, r / base, cfg.db_bytes,
+                0.0, "measured-cpu")
+        update_cells[str(r)] = {
+            "publish_wall_s": wall, "publish_rows_per_s": r / wall,
+            "publish_h2d_bytes": int(delta_bytes),
+            "repreload_wall_s": base,
+            "repreload_h2d_bytes": cfg.db_bytes,
+            "speedup_vs_repreload": base / wall,
+        }
+
+    n_compiles_before = [s.n_compiles for s in system.servers]
+    qps_post = _qps(system, indices)
+    csv.add("serving_post_publish", 0, 0.0, 0.0, 0, qps_post,
+            "measured-cpu")
+    assert [s.n_compiles for s in system.servers] == n_compiles_before, \
+        "publish must not trigger serve-step recompiles"
+
+    results.update({
+        "updates": update_cells,
+        "serving": {
+            "qps_static": qps_static, "qps_post_publish": qps_post,
+            "post_publish_ratio": qps_post / qps_static,
+        },
+    })
+    record_json(OUT_JSON, {
+        "bench": "db_updates", "log_n": LOG_N, "item_bytes": 32,
+        "bucket": BUCKET, "offered_queries": N_QUERIES, "reps": REPS,
+        "protocol": cfg.protocol, **results,
+    })
+    return csv
+
+
+if __name__ == "__main__":
+    print(run().dump())

@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # Fast CI gate: byte-compile every tree we ship, run the fast test tier
-# (pytest.ini defaults to -m "not slow"), then run the quickstart example
-# end-to-end at PIR_SMOKE scale — it exercises the public serving facade
-# (TwoServerPIR over the protocol registry), so API breakage there is
-# caught here instead of by users. The k-server facade demo
+# (pytest.ini defaults to -m "not slow"), then run two examples
+# end-to-end: quickstart at PIR_SMOKE scale (the public serving facade —
+# TwoServerPIR over the protocol registry) and db_updates at
+# PIR_SMOKE_UPD scale (the database plane's stage/publish path on the
+# 3-server protocol), so API breakage in either plane is caught here
+# instead of by users. The k-server facade demo
 # (examples/multi_server.py) and the slow tier (system / sharding /
 # compile-heavy) run out-of-band:  pytest -m slow
 set -euo pipefail
@@ -15,3 +17,6 @@ python -m pytest -q
 # smoke gate: one compiled serve step per party (~1 min each on the dev
 # container), full client -> two servers -> reconstruct round trip
 python examples/quickstart.py
+# db-plane smoke: preload -> query -> stage+publish -> re-query on the
+# 3-server protocol (tiny shape, one bucket: 3 serve compiles total)
+python examples/db_updates.py

@@ -288,13 +288,16 @@ class PIRConfig:
         """The share algebra: ``xor`` | ``additive``.
 
         Consults the registered protocol (the authoritative source) when
-        available; falls back to the naming convention for names not (yet)
-        registered, since configs are constructible standalone.
+        available; falls back to the naming convention ONLY when the
+        protocol plane is absent (``ImportError``) or the name is not
+        (yet) registered (``KeyError``), since configs are constructible
+        standalone. Anything else — a real protocol-plane bug — must
+        surface, not silently degrade to name sniffing.
         """
         try:
             from repro.core.protocol import get
             return get(self.protocol).share_kind
-        except Exception:
+        except (ImportError, KeyError):
             return _implied_share_kind(self.protocol)
 
     @property

@@ -33,6 +33,12 @@ PIR_SMOKE_ADD = PIRConfig(n_items=1 << 14, item_bytes=32,
 # 2^12 records: three parties' serve steps compile in CI-tolerable time
 PIR_SMOKE_K3 = PIRConfig(n_items=1 << 12, item_bytes=32,
                          protocol="xor-dpf-k", n_servers=3, batch_queries=4)
+# online-update smoke (examples/db_updates.py): 3-server epoched updates
+# at 2^10 records / bucket 2 — the smallest shape where the k-party serve
+# steps still compile inside the CI gate's budget
+PIR_SMOKE_UPD = PIRConfig(n_items=1 << 10, item_bytes=32,
+                          protocol="xor-dpf-k", n_servers=3,
+                          batch_queries=2)
 
 PIR_CONFIGS = {
     "pir-512m": PIR_512M,
@@ -45,4 +51,5 @@ PIR_CONFIGS = {
     "pir-smoke": PIR_SMOKE,
     "pir-smoke-add": PIR_SMOKE_ADD,
     "pir-smoke-k3": PIR_SMOKE_K3,
+    "pir-smoke-upd": PIR_SMOKE_UPD,
 }

@@ -31,7 +31,6 @@ import numpy as np
 
 from repro.config import PIRConfig
 from repro.core import dpf
-from repro.crypto.packing import words_to_bytes
 
 U32 = jnp.uint32
 
@@ -54,8 +53,15 @@ def make_database(rng: np.random.Generator, n_items: int, item_bytes: int = 32
 
 
 def db_as_bytes(db_words: np.ndarray) -> np.ndarray:
-    """[N, W] uint32 -> [N, 4W] uint8 view for the int8-matmul path."""
-    return np.asarray(words_to_bytes(jnp.asarray(db_words)))
+    """[N, W] uint32 -> [N, 4W] uint8 view for the int8-matmul path.
+
+    Compat wrapper over the database plane's host packing primitive
+    (works on any [R, W] slice, not just full power-of-two DBs);
+    production code keeps the byte view device-resident
+    (``ShardedDatabase.view("bytes")``) instead of re-packing on the host.
+    """
+    from repro.crypto.packing import np_words_to_bytes
+    return np_words_to_bytes(np.asarray(db_words))
 
 
 # ---------------------------------------------------------------------------

@@ -152,6 +152,11 @@ class PIRProtocol:
 
     name: str = ""
     share_kind: str = "xor"            # xor | additive (reduction algebra)
+    #: which ShardedDatabase view the contraction consumes (db/spec.py
+    #: VIEWS): "words" (u32, XOR scan) | "bytes" (int8, the GEMM). The
+    #: database plane serves the declared view; protocols never convert
+    #: inline inside the compiled step.
+    db_view: str = "words"
 
     # -- client side ----------------------------------------------------
     def n_parties(self, cfg: PIRConfig) -> int:
@@ -185,8 +190,10 @@ class PIRProtocol:
                      plan: ExecutionPlan) -> jax.Array:
         """One shard's partial answers for a batch of keys.
 
-        ``db_local`` is the [rows_local, W] u32 shard; ``start_block`` its
-        shard index (leaf range [start_block * rows_local, ...)).
+        ``db_local`` is the [rows_local, ...] shard of this protocol's
+        declared ``db_view`` (u32 words for XOR schemes, int8 bytes for
+        additive); ``start_block`` its shard index (leaf range
+        [start_block * rows_local, ...)).
         """
         raise NotImplementedError
 
@@ -275,13 +282,6 @@ def _xor_reduce(partial_res: jax.Array, axis: str, n_shards: int,
     if plan.collective == "butterfly":
         return xor_allreduce_butterfly(partial_res, axis, n_shards)
     return xor_allreduce_gather(partial_res, axis)
-
-
-def _words_to_bytes_i8(w: jax.Array) -> jax.Array:
-    """[..., W] u32 -> [..., 4W] i8 byte view (little-endian word order)."""
-    sh = jnp.asarray([0, 8, 16, 24], dtype=U32)
-    b = (w[..., None] >> sh) & U32(0xFF)
-    return b.reshape(w.shape[:-1] + (w.shape[-1] * 4,)).astype(jnp.int8)
 
 
 def _dpf_key_specs(cfg: PIRConfig, n_queries: int, *, party: int,
@@ -387,11 +387,15 @@ class AdditiveDpf2(PIRProtocol):
     ``shares[Q, R] x db[R, L]`` — the DB is read once per *batch*, not per
     query, multiplying operational intensity by Q (DESIGN.md §2,
     kernels/pir_matmul.py). Answers are int32 byte-columns; only their
-    value mod 256 matters, so int32 wraparound preserves it.
+    value mod 256 matters, so int32 wraparound preserves it. The int8
+    byte view of the DB comes from the database plane (``db_view``) —
+    it is resident and incrementally maintained, not re-derived from the
+    word store inside every serve step.
     """
 
     name = "additive-dpf-2"
     share_kind = "additive"
+    db_view = "bytes"
 
     def n_parties(self, cfg: PIRConfig) -> int:
         return 2
@@ -408,12 +412,12 @@ class AdditiveDpf2(PIRProtocol):
 
     def answer_local(self, db_local, keys_local, start_block, log_local,
                      plan):
+        # db_local is already the int8 byte view [rows_local, item_bytes]
         shares = dpf.eval_bytes_batch(keys_local, start_block, log_local)
-        db_bytes = _words_to_bytes_i8(db_local)
         if plan.scan == "pallas":
             from repro.kernels import ops
-            return ops.pir_gemm(shares.astype(jnp.int8), db_bytes)
-        return answer_additive_matmul(db_bytes, shares)
+            return ops.pir_gemm(shares.astype(jnp.int8), db_local)
+        return answer_additive_matmul(db_local, shares)
 
     def reduce(self, partial_res, axis, n_shards, plan):
         return jax.lax.psum(partial_res, axis)   # additive: native psum

@@ -22,16 +22,21 @@ per-shard answer contraction (``answer_local``), the cross-shard reduction
 algebra (``reduce`` — XOR all-reduce for the XOR schemes, psum for
 additive), and the key pytree shapes (``key_specs``); an ``ExecutionPlan``
 picks the kernel path (materialized vs fused expansion, jnp oracle vs the
-Pallas bodies, gather vs butterfly collective). This module only owns the
-mesh plumbing: shard_map specs, the lower-once-per-bucket compile cache,
-and DB placement. Legacy ``path="baseline"|"fused"|"matmul"`` strings map
-onto plans via ``protocol.resolve_plan``.
+Pallas bodies, gather vs butterfly collective). The *database plane*
+(``db/``, DESIGN.md §8) owns what the data looks like and where it lives:
+``DatabaseSpec`` centralizes shape/packing math, ``ShardedDatabase`` owns
+chunked mesh placement, the per-protocol views (u32 words / int8 bytes —
+declared via ``PIRProtocol.db_view``) and epoched online updates. This
+module only owns the mesh plumbing: shard_map specs and the
+lower-once-per-bucket compile cache. Legacy
+``path="baseline"|"fused"|"matmul"`` strings map onto plans via
+``protocol.resolve_plan``.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +48,7 @@ from repro.config import PIRConfig
 from repro.core import dpf
 from repro.core import protocol as protocol_mod
 from repro.core.protocol import ExecutionPlan, PIRProtocol
+from repro.db import DatabaseSpec, ShardedDatabase
 
 U32 = jnp.uint32
 
@@ -87,8 +93,12 @@ def _key_pspec(keys_like, cluster: Tuple[str, ...]):
 
 @dataclass
 class ServeFns:
-    """Compiled server entry points for one party."""
-    serve: Callable            # (db, keys) -> per-query answer shares
+    """Compiled server entry points for one party.
+
+    ``serve`` takes the device array of this protocol's declared DB view
+    (``ShardedDatabase.view(protocol.db_view)``) — never a raw host array.
+    """
+    serve: Callable            # (db_view, keys) -> per-query answer shares
     mesh: jax.sharding.Mesh
     db_sharding: NamedSharding
     cfg: PIRConfig
@@ -135,12 +145,9 @@ def build_serve_fn(
     n_shards = _axis_size(mesh, shard)
     if n_queries % max(n_clusters, 1):
         raise ValueError(f"{n_queries} queries not divisible by {n_clusters} clusters")
-    if cfg.n_items % max(n_shards, 1):
-        raise ValueError("DB size not divisible by shard count")
-    rows_local = cfg.n_items // n_shards
+    # per-shard row math (divisibility, power-of-two) lives in the spec
+    rows_local = DatabaseSpec.from_config(cfg).rows_per_shard(n_shards)
     log_local = int(math.log2(rows_local))
-    if 1 << log_local != rows_local:
-        raise ValueError("per-shard row count must be a power of two")
 
     db_spec = P(shard, None)
     keys_spec_builder = lambda keys: _key_pspec(keys, cluster)
@@ -283,13 +290,19 @@ class BucketedServeFns:
             padded = jax.device_put(padded, fns.key_shardings(padded))
         return padded
 
-    def answer(self, db: jax.Array, keys) -> jax.Array:
+    def answer(self, db: Union[jax.Array, ShardedDatabase], keys
+               ) -> jax.Array:
         """Answer a batch of any size; returns exactly [Q, ...] shares.
 
+        ``db`` is either the protocol's view array or a
+        :class:`ShardedDatabase` (resolved to ``protocol.db_view`` at
+        dispatch, so a freshly published epoch is picked up per batch).
         Q pads up to its bucket (pad answers computed and sliced off);
         batches beyond the largest bucket are chunked. The result is
         asynchronous (no block until the caller consumes it).
         """
+        if isinstance(db, ShardedDatabase):
+            db = db.view(self.protocol.db_view)
         q = self.protocol.n_queries(keys)
         max_b = self.buckets[-1]
         if q <= max_b:
@@ -311,26 +324,54 @@ class BucketedServeFns:
 class PIRServer:
     """One logical PIR server (one of the n non-colluding parties).
 
-    Owns the device-resident DB shards and a *family* of compiled serve
-    steps, one per batch bucket (lower-once-per-bucket). The DB is
-    preloaded once (paper §3.3 "database preloading": transfer cost excluded
-    from query latency) and donated to devices. The share scheme comes from
-    the injected ``PIRProtocol`` (default: the one ``cfg.protocol`` names).
+    References a :class:`ShardedDatabase` (the database plane owns
+    placement, views and epochs — paper §3.3 "database preloading":
+    transfer cost excluded from query latency) and owns a *family* of
+    compiled serve steps, one per batch bucket (lower-once-per-bucket).
+    The database may be *shared* across parties (``MultiServerPIR`` does
+    exactly that — the DB contents are public, only the key material is
+    per-party), so k parties no longer cost k host/device copies. The
+    share scheme comes from the injected ``PIRProtocol`` (default: the
+    one ``cfg.protocol`` names).
+
+    ``db_words`` (a raw host array, wrapped into a private
+    ``ShardedDatabase``) is the legacy construction path; new code passes
+    ``database=``.
     """
 
     def __init__(
         self,
         party: int,
-        db_words: np.ndarray,
-        cfg: PIRConfig,
-        mesh: jax.sharding.Mesh,
+        db_words: Optional[np.ndarray] = None,
+        cfg: PIRConfig = None,
+        mesh: jax.sharding.Mesh = None,
         *,
+        database: Optional[ShardedDatabase] = None,
         n_queries: int = 32,
         path: Optional[str] = "baseline",
         collective: str = "gather",
         buckets: Optional[Sequence[int]] = None,
         protocol: Optional[PIRProtocol] = None,
     ):
+        if (db_words is None) == (database is None):
+            raise ValueError(
+                "pass exactly one of db_words= (legacy host array) or "
+                "database= (ShardedDatabase)")
+        if cfg is None or mesh is None:
+            raise ValueError("cfg= and mesh= are required (the database "
+                             "does not substitute for them)")
+        if database is not None:
+            # fail at construction, not as a shape/sharding error deep
+            # inside the first compiled serve step
+            expect = DatabaseSpec.from_config(cfg)
+            if database.spec != expect:
+                raise ValueError(
+                    f"database spec {database.spec} does not match the "
+                    f"config's {expect}")
+            if database.mesh != mesh:
+                raise ValueError(
+                    "database was placed on a different mesh than the "
+                    "serve steps will run on")
         self.party = party
         self.cfg = cfg
         self.mesh = mesh
@@ -347,7 +388,8 @@ class PIRServer:
         self.protocol = self.bucketed.protocol
         self.n_queries = n_queries
         self.fns = self.bucketed.fns_for(n_queries)[0]
-        self.db = jax.device_put(jnp.asarray(db_words), self.fns.db_sharding)
+        self.db = (database if database is not None
+                   else ShardedDatabase(db_words, cfg, mesh))
 
     @property
     def n_compiles(self) -> int:
@@ -356,6 +398,11 @@ class PIRServer:
     @property
     def buckets(self) -> Tuple[int, ...]:
         return self.bucketed.buckets
+
+    @property
+    def db_epoch(self) -> int:
+        """Current epoch of the (possibly shared) database."""
+        return self.db.epoch
 
     def stage_keys(self, keys) -> dpf.DPFKey:
         """Pad + device_put a key batch ahead of dispatch (pipelining)."""
@@ -366,15 +413,17 @@ class PIRServer:
 
         Any batch size works: Q is padded up to its bucket (answers for pad
         slots are computed and discarded) and batches beyond the largest
-        bucket are chunked. Returns exactly [Q, ...] answer shares.
+        bucket are chunked. The database view is re-fetched per call, so
+        an epoch published between batches is served immediately; a batch
+        already dispatched finishes against the epoch it captured.
+        Returns exactly [Q, ...] answer shares.
         """
         return self.bucketed.answer(self.db, keys)
 
     def lower(self, n_queries: int):
         """Lower (no execution) against ShapeDtypeStructs — dry-run entry."""
         keys = self.protocol.key_specs(self.cfg, n_queries, party=self.party)
-        db_spec = jax.ShapeDtypeStruct(
-            (self.cfg.n_items, self.cfg.item_bytes // 4), np.uint32
-        )
+        db_spec = DatabaseSpec.from_config(self.cfg).view_struct(
+            self.protocol.db_view)
         fns = self.bucketed.fns_for(self.bucketed.bucket_for(n_queries))[0]
         return jax.jit(fns.serve).lower(db_spec, keys)

@@ -43,9 +43,29 @@ def unpack_words_to_bits(words: jnp.ndarray) -> jnp.ndarray:
     return bits.reshape(words.shape[:-1] + (words.shape[-1] * 32,))
 
 
+def words_to_bytes_i8(w: jnp.ndarray) -> jnp.ndarray:
+    """``[..., k] uint32 -> [..., 4k] int8`` byte view (little-endian).
+
+    The MXU-facing form of :func:`words_to_bytes`: identical byte values,
+    reinterpreted as int8 so the additive protocols' GEMM contracts them
+    natively (only the value mod 256 matters downstream).
+    """
+    return words_to_bytes(w).astype(jnp.int8)
+
+
 def np_bytes_to_words(b: np.ndarray) -> np.ndarray:
     """Host-side (numpy) variant for DB construction."""
     assert b.shape[-1] % 4 == 0
     return b.reshape(b.shape[:-1] + (-1, 4)).astype(np.uint32) @ (
         np.uint32(1) << np.arange(0, 32, 8, dtype=np.uint32)
     ).astype(np.uint32)
+
+
+def np_words_to_bytes(w: np.ndarray) -> np.ndarray:
+    """Host-side (numpy) inverse of :func:`np_bytes_to_words`.
+
+    Forces little-endian word order so the view matches the device packing
+    on any host; returns a fresh contiguous uint8 array.
+    """
+    le = np.ascontiguousarray(w, dtype="<u4")
+    return le.view(np.uint8).reshape(w.shape[:-1] + (w.shape[-1] * 4,))

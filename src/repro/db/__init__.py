@@ -1,0 +1,13 @@
+"""The database plane (DESIGN.md §8): layout, placement, online updates.
+
+``DatabaseSpec`` owns shape/packing math; ``ShardedDatabase`` owns mesh
+placement, the per-protocol device views, and epoched ``stage``/``publish``
+online updates. Everything above (``core/server.py``,
+``runtime/serve_loop.py``) consumes these instead of raw ``db_words``
+arrays.
+"""
+from repro.db.spec import VIEWS, DatabaseSpec
+from repro.db.sharded import PublishedDelta, ShardedDatabase, TransferStats
+
+__all__ = ["VIEWS", "DatabaseSpec", "PublishedDelta", "ShardedDatabase",
+           "TransferStats"]

@@ -1,0 +1,138 @@
+"""`DatabaseSpec` — the one owner of PIR database shape/packing math.
+
+Before the database plane, this arithmetic was smeared across four layers:
+``core/pir.py db_as_bytes`` re-packed the whole DB on the host per call,
+``core/server.py`` and ``launch/dryrun.py`` each rebuilt the
+``(n_items, item_bytes // 4)`` struct by hand, and the additive protocol
+converted words to bytes inside every compiled serve step. The spec
+centralizes it: record geometry, the two protocol *views* (u32 words for
+the XOR schemes, int8 bytes for the additive GEMM), per-shard row math,
+and host/device packing conversions (``crypto/packing.py`` primitives).
+
+A view name is protocol metadata (``PIRProtocol.db_view``): the serve
+plumbing asks the spec for that view's shape/dtype/struct instead of
+branching on the share scheme.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import numpy as np
+
+from repro.config import PIRConfig
+from repro.crypto.packing import (np_bytes_to_words, np_words_to_bytes,
+                                  words_to_bytes_i8)
+
+#: registered database views: name -> (dtype, bytes-per-record-column)
+VIEWS = {
+    "words": np.dtype(np.uint32),   # [N, item_bytes // 4] — XOR schemes
+    "bytes": np.dtype(np.int8),     # [N, item_bytes]      — additive GEMM
+}
+
+
+@dataclass(frozen=True)
+class DatabaseSpec:
+    """Shape/packing math for one PIR database (N records × L bytes)."""
+
+    n_items: int
+    item_bytes: int = 32
+
+    def __post_init__(self):
+        if self.n_items <= 0 or self.n_items & (self.n_items - 1):
+            raise ValueError(
+                f"n_items must be a power of two (GGM tree domain), "
+                f"got {self.n_items}")
+        if self.item_bytes % 4:
+            raise ValueError(
+                f"item_bytes must be a multiple of 4 (u32 words), "
+                f"got {self.item_bytes}")
+
+    @classmethod
+    def from_config(cls, cfg: PIRConfig) -> "DatabaseSpec":
+        return cls(n_items=cfg.n_items, item_bytes=cfg.item_bytes)
+
+    # -- geometry -------------------------------------------------------
+
+    @property
+    def item_words(self) -> int:
+        return self.item_bytes // 4
+
+    @property
+    def log_n(self) -> int:
+        return (self.n_items - 1).bit_length()
+
+    @property
+    def db_bytes(self) -> int:
+        return self.n_items * self.item_bytes
+
+    def rows_per_shard(self, n_shards: int) -> int:
+        """Rows held by one DB shard; validates the paper's linear layout
+        (shard d holds rows [d·B_d, (d+1)·B_d), B_d a power of two)."""
+        n_shards = max(n_shards, 1)
+        if self.n_items % n_shards:
+            raise ValueError(
+                f"{self.n_items} rows not divisible by {n_shards} shards")
+        rows = self.n_items // n_shards
+        if rows & (rows - 1):
+            raise ValueError(
+                f"per-shard row count must be a power of two, got {rows}")
+        return rows
+
+    # -- views ----------------------------------------------------------
+
+    def view_dtype(self, view: str) -> np.dtype:
+        if view not in VIEWS:
+            raise KeyError(f"unknown db view {view!r}; known: {sorted(VIEWS)}")
+        return VIEWS[view]
+
+    def view_shape(self, view: str) -> Tuple[int, int]:
+        self.view_dtype(view)
+        cols = self.item_words if view == "words" else self.item_bytes
+        return (self.n_items, cols)
+
+    def view_struct(self, view: str) -> jax.ShapeDtypeStruct:
+        """ShapeDtypeStruct of one view (dry-run lowering, `.lower` entries)."""
+        return jax.ShapeDtypeStruct(self.view_shape(view),
+                                    self.view_dtype(view))
+
+    # -- packing --------------------------------------------------------
+
+    def validate_words(self, db_words: np.ndarray) -> np.ndarray:
+        arr = np.asarray(db_words)
+        if arr.shape != self.view_shape("words") or arr.dtype != np.uint32:
+            raise ValueError(
+                f"db_words must be {self.view_shape('words')} uint32, got "
+                f"{arr.shape} {arr.dtype}")
+        return arr
+
+    def words_to_bytes_host(self, words: np.ndarray) -> np.ndarray:
+        """[..., W] u32 -> [..., 4W] u8 on the host (little-endian)."""
+        return np_words_to_bytes(np.asarray(words))
+
+    def bytes_to_words_host(self, b: np.ndarray) -> np.ndarray:
+        """[..., 4W] u8 -> [..., W] u32 on the host (little-endian)."""
+        return np_bytes_to_words(np.asarray(b, np.uint8))
+
+    def words_to_bytes_device(self, words: jax.Array) -> jax.Array:
+        """[..., W] u32 -> [..., 4W] i8 as a traced jax op (the device-side
+        view derivation — never a host round trip)."""
+        return words_to_bytes_i8(words)
+
+    def coerce_rows_to_words(self, values: np.ndarray) -> np.ndarray:
+        """Normalize update payloads to [R, W] u32 rows.
+
+        Accepts either the word form ``[R, item_words] u32`` or the byte
+        form ``[R, item_bytes] u8`` (converted host-side, O(R) work).
+        """
+        arr = np.asarray(values)
+        if arr.ndim != 2:
+            raise ValueError(f"row values must be 2-D, got shape {arr.shape}")
+        if arr.shape[1] == self.item_bytes and arr.dtype == np.uint8:
+            return self.bytes_to_words_host(arr)
+        if arr.shape[1] == self.item_words:
+            return arr.astype(np.uint32, copy=False)
+        raise ValueError(
+            f"row values must be [R, {self.item_words}] u32 words or "
+            f"[R, {self.item_bytes}] u8 bytes, got {arr.shape} {arr.dtype}")

@@ -152,7 +152,8 @@ def lower_pir_cell(pir_name: str, multi_pod: bool, *, path: str = "fused",
                    chunk_log: int = 12) -> dict:
     """Lower + compile a PIR serve step on the production mesh."""
     import dataclasses
-    from repro.core.server import PIRServer, build_serve_fn, key_specs
+    from repro.core.server import build_serve_fn, key_specs
+    from repro.db import DatabaseSpec
     mesh = make_production_mesh(multi_pod=multi_pod)
     cfg = PIR_CONFIGS[pir_name]
     if path == "matmul" and cfg.protocol != "additive-dpf-2":
@@ -164,8 +165,10 @@ def lower_pir_cell(pir_name: str, multi_pod: bool, *, path: str = "fused",
         fns = build_serve_fn(cfg, mesh, n_queries=n_queries, path=path,
                              collective=collective, chunk_log=chunk_log)
         keys = key_specs(cfg, n_queries)
-        db_s = jax.ShapeDtypeStruct((cfg.n_items, cfg.item_bytes // 4),
-                                    np.uint32)
+        # the struct of the protocol's declared view (words for XOR, int8
+        # bytes for additive) — the database plane owns this math
+        db_s = DatabaseSpec.from_config(cfg).view_struct(
+            fns.protocol.db_view)
         lowered = jax.jit(fns.serve).lower(db_s, keys)
         t_lower = time.time() - t0
         compiled = lowered.compile()

@@ -37,6 +37,7 @@ from repro.core import dpf, pir
 from repro.core import protocol as protocol_mod
 from repro.core.protocol import PIRProtocol
 from repro.core.server import PIRServer, bucket_for
+from repro.db import ShardedDatabase
 from repro.runtime.fault import StragglerMonitor
 
 #: dispatch-queue depth of the double-buffered loop: one batch executing on
@@ -88,12 +89,17 @@ class AnswerFuture:
 
     Thread-safe; ``result()`` blocks until the scheduler completes the
     batch carrying this query (or re-raises the batch's failure).
+    ``epoch`` is the database epoch the answer was computed at (set with
+    the result when the scheduler has an ``epoch_of`` source; ``None``
+    otherwise) — clients of an online-updated DB read it to know which
+    version their record reflects.
     """
 
     def __init__(self):
         self._ev = threading.Event()
         self._value: Any = None
         self._exc: Optional[BaseException] = None
+        self.epoch: Optional[int] = None
 
     def set_result(self, value: Any):
         self._value = value
@@ -123,6 +129,7 @@ class _Batch:
     payload: Any = None               # collated (stacked) keys
     staged: Any = None                # padded + device_put keys
     bucket: int = 0
+    epoch: Optional[int] = None       # DB epoch captured at dispatch
 
 
 class QueryScheduler:
@@ -135,6 +142,17 @@ class QueryScheduler:
       stage(payload)        pad to bucket + device_put (overlaps compute)
       dispatch(staged)      launch the compiled serve step (async, no block)
       finalize(raw, n)      block + convert the first n real answers
+
+    An optional ``epoch_of(raw)`` callable extracts the database epoch a
+    batch was computed at from that batch's *own* dispatch result (the
+    dispatcher captures an atomic DB snapshot and threads its epoch
+    through ``raw``), and the scheduler stamps it onto every future the
+    batch resolves — batch-local, so concurrent dispatchers can never
+    cross-tag. Across an epoch swap (``ShardedDatabase.publish``),
+    batches already dispatched finish — and stay tagged — against the
+    old epoch, while queued/pending batches are re-tagged to the epoch
+    they actually compute against. Queries never drain or stall across a
+    swap.
 
     Queries arrive via :meth:`submit` (returns an :class:`AnswerFuture`).
     Batches are cut when a full bucket's worth is pending, or when the
@@ -160,11 +178,13 @@ class QueryScheduler:
         monitor: Optional[StragglerMonitor] = None,
         depth: int = PIPELINE_DEPTH,
         clock: Callable[[], float] = time.monotonic,
+        epoch_of: Optional[Callable[[Any], Optional[int]]] = None,
     ):
         self._collate = collate
         self._stage = stage
         self._dispatch = dispatch
         self._finalize = finalize
+        self._epoch_of = epoch_of
         self.buckets = tuple(sorted(set(buckets)))
         self.n_clusters = max(n_clusters, 1)
         self.max_wait_s = max_wait_s
@@ -268,6 +288,14 @@ class QueryScheduler:
         batch.staged = self._stage(batch.payload)
         t0 = self.clock()
         raw = self._dispatch(batch.staged)
+        if self._epoch_of is not None:
+            # extracted from THIS batch's dispatch result: the dispatcher
+            # snapshots the DB atomically and threads the epoch it read
+            # through raw, so tag == data even across a concurrent
+            # publish or a second dispatching thread (the dispatched step
+            # holds the old epoch's immutable arrays and finishes against
+            # them)
+            batch.epoch = self._epoch_of(raw)
         return batch, raw, t0
 
     def _complete(self, batch: _Batch, raw: Any, t0: float):
@@ -275,6 +303,7 @@ class QueryScheduler:
             answers = self._finalize(raw, len(batch.items))
             dt = self.clock() - t0
             for fut, ans in zip(batch.futures, answers):
+                fut.epoch = batch.epoch      # before the result event fires
                 fut.set_result(ans)
         except BaseException as e:       # propagate to the waiting clients
             for fut in batch.futures:
@@ -480,13 +509,22 @@ class MultiServerPIR:
     The facade over the protocol plane (``core/protocol.py``): the injected
     ``PIRProtocol`` (default: the one ``cfg.protocol`` names) decides the
     party count, per-party key generation, and reconstruction; one
-    :class:`PIRServer` per party owns that party's DB replica and compiled
-    step family; one :class:`QueryScheduler` coalesces all clients' queries
-    and fans every batch out to all k parties.
+    :class:`PIRServer` per party owns that party's compiled step family;
+    one :class:`QueryScheduler` coalesces all clients' queries and fans
+    every batch out to all k parties.
+
+    The database is ONE shared :class:`ShardedDatabase` (DESIGN.md §8):
+    its contents are public in the PIR model (privacy protects the query
+    index), so k parties referencing the same placed views costs one
+    host pass and one device residency instead of k of each. In a real
+    deployment each party holds its own replica and applies the identical
+    public ``update``/``publish`` delta stream — determinism of the delta
+    is what keeps all parties' answer shares consistent; sharing the
+    object here is the single-host degenerate case of that.
 
     All servers run the same binary on disjoint meshes in production; on
-    this container they share the device but keep separate DB buffers and
-    compiled steps, preserving the protocol structure exactly.
+    this container they share the device but keep separate key material
+    and compiled steps, preserving the protocol structure exactly.
 
     Two client APIs:
 
@@ -498,9 +536,14 @@ class MultiServerPIR:
                        batches and reconciles all parties' answer shares
                        asynchronously. Call :meth:`start` for a background
                        session (or rely on ``query``/``pump``).
+
+    Online updates: :meth:`update` stages public row writes,
+    :meth:`publish` atomically swaps in the new epoch (O(rows) transfer,
+    no serving stall); every resolved :class:`AnswerFuture` carries the
+    ``epoch`` its answer was computed at.
     """
 
-    def __init__(self, db_words: np.ndarray, cfg: PIRConfig, mesh,
+    def __init__(self, db_words, cfg: PIRConfig, mesh,
                  *, path: Optional[str] = "fused", n_queries: int = 4,
                  buckets: Optional[Sequence[int]] = None,
                  max_wait_s: float = DEFAULT_MAX_WAIT_S,
@@ -511,8 +554,12 @@ class MultiServerPIR:
         self.protocol = (protocol if protocol is not None
                          else protocol_mod.for_config(cfg))
         self.n_parties = self.protocol.n_parties(cfg)
+        # one shared database plane object for all k parties (a host
+        # array is wrapped; an existing ShardedDatabase passes through)
+        self.db = (db_words if isinstance(db_words, ShardedDatabase)
+                   else ShardedDatabase(db_words, cfg, mesh))
         self.servers = [
-            PIRServer(party=b, db_words=db_words, cfg=cfg, mesh=mesh,
+            PIRServer(party=b, database=self.db, cfg=cfg, mesh=mesh,
                       n_queries=n_queries, path=path, buckets=buckets,
                       protocol=self.protocol)
             for b in range(self.n_parties)
@@ -534,6 +581,7 @@ class MultiServerPIR:
         servers = self.servers
         proto = self.protocol
         parties = range(self.n_parties)
+        db = self.db
 
         def collate(items):
             # items: per-query tuples of per-party keys -> per-party batches
@@ -544,16 +592,25 @@ class MultiServerPIR:
             return tuple(servers[p].stage_keys(payload[p]) for p in parties)
 
         def dispatch(staged):
-            return tuple(servers[p].answer(staged[p]) for p in parties)
+            # one atomic (epoch, views) capture for the whole k-party
+            # fan-out: every party answers against the SAME epoch, and the
+            # epoch rides WITH the answers, so the tag can never disagree
+            # with the data read — even across concurrent dispatchers
+            epoch, views = db.snapshot((proto.db_view,))
+            view = views[proto.db_view]
+            return (tuple(servers[p].bucketed.answer(view, staged[p])
+                          for p in parties), epoch)
 
         def finalize(raw, n):
-            rec = np.asarray(proto.reconstruct([r[:n] for r in raw]))
+            answers, _ = raw
+            rec = np.asarray(proto.reconstruct([r[:n] for r in answers]))
             return list(rec)
 
         return QueryScheduler(
             collate=collate, stage=stage, dispatch=dispatch,
             finalize=finalize, buckets=servers[0].buckets,
-            n_clusters=n_clusters, max_wait_s=max_wait_s)
+            n_clusters=n_clusters, max_wait_s=max_wait_s,
+            epoch_of=lambda raw: raw[1])
 
     # -- streaming session API ------------------------------------------
 
@@ -573,10 +630,38 @@ class MultiServerPIR:
 
     def submit(self, index: int) -> AnswerFuture:
         """Private retrieval of ``db[index]``; resolves to one record
-        (``[W]`` u32 words for the XOR protocols, bytes for additive)."""
+        (``[W]`` u32 words for the XOR protocols, bytes for additive).
+        The resolved future's ``epoch`` names the DB version answered."""
         with self._lock:     # client-side keygen shares one rng
             q = pir.query_gen(self.rng, index, self.cfg)
         return self.scheduler.submit(q.keys)
+
+    # -- online updates (public metadata; privacy model untouched) ------
+
+    @property
+    def epoch(self) -> int:
+        """Current database epoch (bumped by :meth:`publish`)."""
+        return self.db.epoch
+
+    def update(self, rows, values) -> int:
+        """Stage public row writes into the pending delta log.
+
+        ``values``: [R, item_words] u32 or [R, item_bytes] u8. Nothing
+        is served from the delta until :meth:`publish`. In a multi-host
+        deployment every party stages the identical delta (it is public
+        metadata), which is what keeps the k answer shares consistent.
+        Returns the total staged entry count.
+        """
+        return self.db.stage(rows, values)
+
+    def publish(self) -> int:
+        """Swap staged updates in as the next epoch (O(rows) transfer).
+
+        Serving never stalls: batches already dispatched finish against
+        the previous epoch (their answers stay tagged with it); every
+        later batch reads the new views. Returns the new current epoch.
+        """
+        return self.db.publish()
 
     # -- synchronous batch API ------------------------------------------
 

@@ -338,12 +338,19 @@ def make_serve_step(run: RunConfig, mesh: Mesh, *,
 
 
 class PIRStep(NamedTuple):
-    """Compiled PIR serving entry points (one bucket family, one party)."""
-    answer: Callable           # (db, keys) -> [bucket, W] shares (async)
+    """Compiled PIR serving entry points (one bucket family, one party).
+
+    ``answer`` takes either a ``ShardedDatabase`` (the database plane
+    resolves the protocol's declared view per dispatch — DESIGN.md §8) or
+    that view's raw device array; ``db_view`` names which view the
+    compiled steps contract against.
+    """
+    answer: Callable           # (db, keys) -> [bucket, ...] shares (async)
     stage_keys: Callable       # keys -> padded + device_put keys
     buckets: Tuple[int, ...]
     db_sharding: NamedSharding
     n_compiles: Callable[[], int]    # cache-miss counter (tests/benches)
+    db_view: str = "words"
 
 
 def make_pir_serve_step(
@@ -381,4 +388,5 @@ def make_pir_serve_step(
     db_sharding = bucketed.fns_for(bucketed.buckets[0])[0].db_sharding
     return PIRStep(answer=bucketed.answer, stage_keys=bucketed.stage,
                    buckets=bucketed.buckets, db_sharding=db_sharding,
-                   n_compiles=lambda: bucketed.n_compiles)
+                   n_compiles=lambda: bucketed.n_compiles,
+                   db_view=bucketed.protocol.db_view)

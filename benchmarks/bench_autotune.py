@@ -1,0 +1,89 @@
+"""Engine-plane throughput: measured tuned plans vs the plan_for heuristic.
+
+The §Perf companion to the kernel engine (``src/repro/engine/``,
+DESIGN.md §9): for every (protocol, bucket) cell the autotuner enumerates
+the feasible candidate plans, times each on the real (db_view, bucket)
+shapes, and keeps the winner. This bench reports the winner's QPS next to
+the heuristic's **from the same measurement session**, so the comparison
+is noise-consistent: the heuristic is always candidate #0, hence
+``tuned_qps >= heuristic_qps`` by construction — the interesting number is
+*how much* headroom measurement finds over folklore on this backend.
+
+The grid covers both share algebras (the XOR scan family and the additive
+GEMM) at two bucket sizes; the k-party ring protocol reuses the same XOR
+scan kernels per component, so its plan space is the xor-dpf-2 one
+(measured end-to-end in ``bench_protocols``). Tuned winners are persisted
+to the plan cache (``REPRO_PLAN_CACHE``, default
+``results/plan_cache.json``), so subsequent ``path=None/"auto"`` servers
+in this working directory pick them up.
+
+Run: PYTHONPATH=src python -m benchmarks.run --only autotune
+"""
+from __future__ import annotations
+
+from benchmarks.common import Csv, record_json
+from repro import engine
+from repro.config import PIRConfig
+from repro.engine.tuner import TuneBudget, plan_label
+
+LOG_N = 12                      # 4096 records x 32 B (CPU-container scale)
+BUCKETS = (2, 8)                # two compiled bucket sizes per protocol
+OUT_JSON = "BENCH_autotune.json"
+
+#: per-cell tuning budget. Deliberately small on this container: XLA
+#: compiles of the interpret-mode Pallas bodies cost ~30 s each, so one
+#: candidate per kernel family keeps the whole grid inside the bench
+#: budget; on a real TPU (sub-second Mosaic compiles) raise
+#: max_candidates to sweep the full tile ladders.
+BUDGET = TuneBudget(max_candidates=1, warmup=1, iters=3, max_seconds=120.0)
+
+CELLS = [
+    ("xor-dpf-2",
+     PIRConfig(n_items=1 << LOG_N, item_bytes=32)),
+    ("additive-dpf-2",
+     PIRConfig(n_items=1 << LOG_N, item_bytes=32,
+               protocol="additive-dpf-2")),
+]
+
+
+def run() -> Csv:
+    cache = engine.plan_cache()
+    csv = Csv(["cell", "protocol", "bucket", "heuristic_plan", "tuned_plan",
+               "heuristic_qps", "tuned_qps", "speedup", "candidates",
+               "timed", "label"])
+    cells = {}
+    for name, cfg in CELLS:
+        for bucket in BUCKETS:
+            res = engine.tune(cfg, bucket, budget=BUDGET, cache=cache)
+            h_qps = bucket / res.heuristic_s
+            t_qps = bucket / res.tuned_s
+            key = f"{name}/b{bucket}"
+            cells[key] = {
+                "protocol": cfg.protocol, "bucket": bucket,
+                "heuristic_plan": plan_label(res.heuristic),
+                "tuned_plan": plan_label(res.plan),
+                "heuristic_s": res.heuristic_s, "tuned_s": res.tuned_s,
+                "heuristic_qps": h_qps, "tuned_qps": t_qps,
+                "speedup": res.speedup,
+                "timings": res.timings,
+                "n_candidates": res.n_candidates, "n_timed": res.n_timed,
+            }
+            csv.add(key, cfg.protocol, bucket, plan_label(res.heuristic),
+                    plan_label(res.plan), h_qps, t_qps, res.speedup,
+                    res.n_candidates, res.n_timed, "measured-cpu")
+    cache.save()
+
+    record_json(OUT_JSON, {
+        "bench": "autotune",
+        "log_n": LOG_N, "item_bytes": 32, "buckets": list(BUCKETS),
+        "budget": {"max_candidates": BUDGET.max_candidates,
+                   "iters": BUDGET.iters, "warmup": BUDGET.warmup},
+        "backend": engine.backend(),
+        "plan_cache": cache.path,
+        "cells": cells,
+    })
+    return csv
+
+
+if __name__ == "__main__":
+    print(run().dump())

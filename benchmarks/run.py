@@ -12,7 +12,7 @@ import sys
 import time
 
 BENCHES = ["fig3", "fig9", "fig10_table1", "fig11", "fig12", "kernels",
-           "serving", "protocols", "db_updates"]
+           "serving", "protocols", "db_updates", "autotune"]
 
 
 def main(argv=None) -> int:

@@ -20,3 +20,7 @@ python examples/quickstart.py
 # db-plane smoke: preload -> query -> stage+publish -> re-query on the
 # 3-server protocol (tiny shape, one bucket: 3 serve compiles total)
 python examples/db_updates.py
+# engine-plane smoke: tiny-budget autotune (interpret mode, <=2 candidates
+# per kernel, nothing persisted) + the heuristic-fallback gate — asserts
+# an empty plan cache resolves to exactly the pre-engine plan_for choices
+python -m repro.engine --smoke

@@ -25,6 +25,10 @@ from typing import Dict, List, Optional
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 HBM_BW = 819e9               # bytes/s per chip
 LINK_BW = 50e9               # bytes/s per ICI link per chip
+VMEM_BYTES = 16 * 2**20      # on-chip vector memory per core (~16 MB);
+                             # the engine's tile-feasibility bound
+                             # (engine/kernels.py) prunes candidate plans
+                             # whose per-grid-step working set exceeds it
 
 _DTYPE_BYTES = {
     "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,

@@ -37,7 +37,7 @@ xor-dpf-k       k>=2 servers, k-of-k XOR shares (beyond-paper, 1-private):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, field, replace
 from functools import partial
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -59,7 +59,7 @@ U32 = jnp.uint32
 
 @dataclass(frozen=True)
 class ExecutionPlan:
-    """How one compiled answer step executes (DESIGN.md §7.3).
+    """How one compiled answer step executes (DESIGN.md §7.3, §9).
 
     expand     "materialize": phase-split — Eval(k,·) selection vectors are
                written out, then scanned (the paper's host-eval structure).
@@ -73,15 +73,44 @@ class ExecutionPlan:
     chunk_log  fused path: log2 leaves per expand+scan chunk.
     collective "gather" | "butterfly": XOR all-reduce shape over the DB-shard
                axis (additive protocols psum natively and ignore this).
+
+    Tile fields (the engine plane, DESIGN.md §9): the VMEM tilings that
+    used to be hardcoded constants in ``kernels/ops.py``. Defaults are the
+    pre-engine constants; the autotuner (``engine/tuner.py``) replaces
+    them with measured winners. Requested tiles are *legalized* against
+    the concrete shapes at kernel entry (``engine.legal_tile``), so a plan
+    tuned at one shape stays valid at another.
+
+    tile_r     rows staged through VMEM per grid step: the Pallas scan's
+               row tile (``dpxor``, pre-engine 2048) / the GEMM's
+               reduction tile (``pir_matmul``, pre-engine 1024).
+    tile_q     GEMM query-batch tile (sublane dim).
+    tile_l     GEMM record-byte tile (lane dim).
+    provenance "heuristic" (rule-picked fallback) | "tuned" (measured
+               winner from the plan cache) | "forced" (legacy ``path=``
+               string). Excluded from equality/hashing: two plans that
+               execute identically compare equal regardless of how they
+               were chosen.
     """
     expand: str = "materialize"
     scan: str = "jnp"
     chunk_log: int = 12
     collective: str = "gather"
+    tile_r: int = 2048
+    tile_q: int = 8
+    tile_l: int = 128
+    provenance: str = field(default="heuristic", compare=False)
 
     @property
     def name(self) -> str:
         return f"{self.expand}/{self.scan}"
+
+    def describe(self) -> Dict[str, object]:
+        """Reporting form (dry-run JSONL, ``lower()`` provenance)."""
+        return {"name": self.name, "expand": self.expand, "scan": self.scan,
+                "chunk_log": self.chunk_log, "collective": self.collective,
+                "tile_r": self.tile_r, "tile_q": self.tile_q,
+                "tile_l": self.tile_l, "provenance": self.provenance}
 
 
 #: legacy ``path=`` strings -> plans (the pre-registry server API).
@@ -96,15 +125,27 @@ PATH_PLANS: Dict[str, ExecutionPlan] = {
 def resolve_plan(path: Optional[str], cfg: PIRConfig, n_queries: int, *,
                  chunk_log: int = 12, collective: str = "gather"
                  ) -> ExecutionPlan:
-    """A plan from a legacy path string, or the selector when path is None."""
+    """A plan from a legacy path string, or the engine when path is None.
+
+    ``path=None/"auto"`` delegates to the engine plane (DESIGN.md §9):
+    plan-cache hit → measured tuned plan; miss → the deterministic
+    heuristic (:func:`plan_for`). Legacy strings stay forced plans
+    (provenance ``"forced"``); additive protocols pin the GEMM reduction
+    tile to its pre-engine kernel default.
+    """
     if path is None or path == "auto":
-        plan = plan_for(cfg, n_queries, chunk_log=chunk_log)
-    elif path in PATH_PLANS:
-        plan = PATH_PLANS[path]
-    else:
+        from repro import engine
+        return engine.resolve(cfg, n_queries, chunk_log=chunk_log,
+                              collective=collective)
+    if path not in PATH_PLANS:
         raise ValueError(f"unknown path {path!r}; "
                          f"expected one of {sorted(PATH_PLANS)} or 'auto'")
-    return replace(plan, chunk_log=chunk_log, collective=collective)
+    plan = replace(PATH_PLANS[path], chunk_log=chunk_log,
+                   collective=collective, provenance="forced")
+    if get(cfg.protocol).share_kind == "additive":
+        from repro.engine.kernels import GEMM_TILE_R_DEFAULT
+        plan = replace(plan, tile_r=GEMM_TILE_R_DEFAULT)
+    return plan
 
 
 def plan_for(cfg: PIRConfig, n_queries: int, *,
@@ -112,7 +153,9 @@ def plan_for(cfg: PIRConfig, n_queries: int, *,
              chunk_log: int = 12) -> ExecutionPlan:
     """Pick the kernel path per (db size, batch bucket, backend).
 
-    Selection rules (DESIGN.md §7.3):
+    Since the engine plane this is a thin alias of
+    ``engine.heuristic_plan`` — the deterministic fallback the plan cache
+    misses to. The selection rules (DESIGN.md §7.3) are unchanged:
       * additive protocols contract via the GEMM regardless — ``scan``
         chooses jnp dot vs the Pallas ``pir_matmul`` body;
       * XOR protocols materialize bits only while the per-query bit vector
@@ -126,16 +169,9 @@ def plan_for(cfg: PIRConfig, n_queries: int, *,
       * batch bucket: single-query buckets skip the fused chunk machinery
         (nothing to amortize; the materialized form has the simpler HLO).
     """
-    if backend is None:
-        backend = jax.default_backend()
-    scan = "pallas" if backend == "tpu" else "jnp"
-    proto = get(cfg.protocol)
-    if proto.share_kind == "additive":
-        return ExecutionPlan(expand="materialize", scan=scan,
-                             chunk_log=chunk_log)
-    small_db = cfg.n_items <= (1 << chunk_log)
-    expand = "materialize" if small_db or n_queries <= 1 else "fused"
-    return ExecutionPlan(expand=expand, scan=scan, chunk_log=chunk_log)
+    from repro.engine.tuner import heuristic_plan
+    return heuristic_plan(cfg, n_queries, backend=backend,
+                          chunk_log=chunk_log)
 
 
 # ---------------------------------------------------------------------------
@@ -273,7 +309,7 @@ def _xor_scan(db_local: jax.Array, bits: jax.Array,
     """[R, W] db x [Q, R] bits -> [Q, W], jnp oracle or the Pallas body."""
     if plan.scan == "pallas":
         from repro.kernels import ops
-        return ops.dpxor(db_local, bits)
+        return ops.dpxor(db_local, bits, tile_r=plan.tile_r)
     return jax.vmap(lambda b: dpxor(db_local, b))(bits)
 
 
@@ -416,7 +452,9 @@ class AdditiveDpf2(PIRProtocol):
         shares = dpf.eval_bytes_batch(keys_local, start_block, log_local)
         if plan.scan == "pallas":
             from repro.kernels import ops
-            return ops.pir_gemm(shares.astype(jnp.int8), db_local)
+            return ops.pir_gemm(shares.astype(jnp.int8), db_local,
+                                tile_q=plan.tile_q, tile_r=plan.tile_r,
+                                tile_l=plan.tile_l)
         return answer_additive_matmul(db_local, shares)
 
     def reduce(self, partial_res, axis, n_shards, plan):

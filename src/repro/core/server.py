@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Callable, Optional, Sequence, Tuple, Union
+from typing import Callable, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -107,6 +107,34 @@ class ServeFns:
     protocol: PIRProtocol
     # batched-key pytree -> NamedSharding pytree (for async host staging)
     key_shardings: Optional[Callable] = None
+
+    def plan_report(self) -> dict:
+        """Provenance + predicted-bytes row for the resolved plan
+        (engine-plane reporting, DESIGN.md §9): the modeled HBM traffic of
+        one device's contraction — ``n_local_queries`` against its own
+        DB shard."""
+        from repro import engine
+        n_shards = _axis_size(self.mesh, _shard_axis(self.mesh))
+        return engine.plan_report(self.cfg, self.plan, self.n_local_queries,
+                                  n_shards=n_shards)
+
+
+class LoweredServe(NamedTuple):
+    """``PIRServer.lower`` result: the jax lowering plus plan provenance.
+
+    ``lowered`` keeps the full jax API (``.compile()``, ``.as_text()``);
+    ``plan``/``report`` surface which kernel path this bucket resolved to
+    and the engine's predicted step bytes (DESIGN.md §9).
+    """
+    lowered: object
+    plan: ExecutionPlan
+    report: dict
+
+    def compile(self):
+        return self.lowered.compile()
+
+    def as_text(self, *a, **k):
+        return self.lowered.as_text(*a, **k)
 
 
 def build_serve_fn(
@@ -226,9 +254,12 @@ class BucketedServeFns:
     Ragged traffic never recompiles: a batch of Q queries is padded up to
     the smallest bucket >= Q (``PIRProtocol.pad``) and answered by that
     bucket's cached ``jax.jit`` step. ``n_compiles`` counts cache misses so
-    tests/benches can assert reuse. When ``path`` is None, each bucket's
-    plan is chosen by ``protocol.plan_for`` — so e.g. small and large
-    buckets of the same server family may take different kernel paths.
+    tests/benches can assert reuse. When ``path`` is None/"auto", each
+    bucket's plan comes from the engine plane (plan-cache hit → measured
+    tuned plan, miss → the ``plan_for`` heuristic) — so e.g. small and
+    large buckets of the same server family may take different kernel
+    paths. Plan resolution happens HERE, once per bucket at build time
+    (``plan_for_bucket``); dispatch never touches the tuner or cache I/O.
     """
 
     def __init__(self, cfg: PIRConfig, mesh: jax.sharding.Mesh, *,
@@ -252,16 +283,37 @@ class BucketedServeFns:
         self.buckets = tuple(sorted(set(buckets)))
         self.n_compiles = 0
         self._cache: dict = {}   # bucket -> (ServeFns, jitted serve)
+        self._plans: dict = {}   # bucket -> resolved ExecutionPlan
 
     def bucket_for(self, n: int) -> int:
         return bucket_for(self.buckets, n)
+
+    def plan_for_bucket(self, bucket: int) -> ExecutionPlan:
+        """The bucket's resolved plan — one engine/heuristic resolution per
+        bucket, cached, shared with the compiled step (``fns_for``)."""
+        if bucket not in self._plans:
+            self._plans[bucket] = protocol_mod.resolve_plan(
+                self.path, self.cfg, bucket, chunk_log=self.chunk_log,
+                collective=self.collective)
+        return self._plans[bucket]
+
+    def plan_report(self) -> dict:
+        """{bucket: plan provenance + predicted bytes} for every bucket —
+        resolved without compiling anything (runtime/launch reporting)."""
+        from repro import engine
+        n_shards = _axis_size(self.mesh, _shard_axis(self.mesh))
+        n_clusters = max(_axis_size(self.mesh, _cluster_axes(self.mesh)), 1)
+        return {b: engine.plan_report(self.cfg, self.plan_for_bucket(b),
+                                      b // n_clusters, n_shards=n_shards)
+                for b in self.buckets}
 
     def fns_for(self, bucket: int) -> Tuple[ServeFns, Callable]:
         if bucket not in self._cache:
             fns = build_serve_fn(self.cfg, self.mesh, n_queries=bucket,
                                  path=self.path, collective=self.collective,
                                  chunk_log=self.chunk_log,
-                                 protocol=self.protocol)
+                                 protocol=self.protocol,
+                                 plan=self.plan_for_bucket(bucket))
             # explicit in_shardings: host-resident and pre-staged
             # (device_put) key batches hit the SAME executable — without
             # this, staging would silently fork a second ~identical
@@ -408,6 +460,11 @@ class PIRServer:
         """Pad + device_put a key batch ahead of dispatch (pipelining)."""
         return self.bucketed.stage(keys)
 
+    def plan_report(self) -> dict:
+        """Per-bucket plan provenance (tuned vs heuristic vs forced) +
+        predicted step bytes — the engine plane's reporting surface."""
+        return self.bucketed.plan_report()
+
     def answer(self, keys) -> jax.Array:
         """Answer a batch of queries (keys stacked on the leading axis).
 
@@ -420,10 +477,17 @@ class PIRServer:
         """
         return self.bucketed.answer(self.db, keys)
 
-    def lower(self, n_queries: int):
-        """Lower (no execution) against ShapeDtypeStructs — dry-run entry."""
+    def lower(self, n_queries: int) -> "LoweredServe":
+        """Lower (no execution) against ShapeDtypeStructs — dry-run entry.
+
+        Returns the lowered artifact *with its plan*: dry-run consumers
+        report which kernel path a bucket compiled to and whether it was
+        ``tuned`` (plan-cache hit), ``heuristic``, or ``forced``
+        (legacy ``path=``), next to the HLO cost numbers.
+        """
         keys = self.protocol.key_specs(self.cfg, n_queries, party=self.party)
         db_spec = DatabaseSpec.from_config(self.cfg).view_struct(
             self.protocol.db_view)
         fns = self.bucketed.fns_for(self.bucketed.bucket_for(n_queries))[0]
-        return jax.jit(fns.serve).lower(db_spec, keys)
+        return LoweredServe(lowered=jax.jit(fns.serve).lower(db_spec, keys),
+                            plan=fns.plan, report=fns.plan_report())

@@ -1,0 +1,95 @@
+"""The engine plane: kernel registry + measured autotuner + plan cache.
+
+This package owns plan selection end to end (DESIGN.md §9):
+
+``engine/backend.py``   one backend probe for the whole stack
+                        (``REPRO_FORCE_BACKEND`` override) + legal-tile
+                        arithmetic (largest legal divisor ≤ requested).
+``engine/kernels.py``   descriptors over the answer-kernel bodies with
+                        declared tunable spaces and a VMEM-footprint
+                        validity model (``analysis/roofline.py`` math) —
+                        infeasible candidates are pruned without running.
+``engine/tuner.py``     the measured autotuner: times feasible
+                        ``ExecutionPlan`` candidates on the real
+                        (db_view, bucket) shapes under a budget.
+``engine/cache.py``     persistent JSON plan cache keyed by
+                        (backend, protocol, spec signature, bucket).
+
+:func:`resolve` is the seam the protocol plane delegates to
+(``core/protocol.py resolve_plan`` with ``path=None/"auto"``): cache hit →
+tuned plan; miss → the deterministic heuristic, bit-for-bit the
+pre-engine ``plan_for``. Resolution happens once per bucket at
+``BucketedServeFns`` build time — never on the dispatch path.
+"""
+from __future__ import annotations
+
+from dataclasses import replace as _replace
+from typing import Optional
+
+from repro.engine.backend import (FORCE_BACKEND_ENV, backend,
+                                  default_interpret, legal_tile, on_tpu)
+from repro.engine.cache import (PlanCache, cache_path, plan_key,
+                                spec_signature)
+from repro.engine.kernels import (KERNELS, KernelDescriptor, ProblemShape,
+                                  get_kernel, predicted_step_bytes,
+                                  serve_kernels)
+from repro.engine.tuner import (SMOKE_BUDGET, TuneBudget, TuneResult,
+                                autotune, candidate_plans, heuristic_plan,
+                                plan_label, problem_shape, tune,
+                                tune_standalone)
+
+__all__ = [
+    "FORCE_BACKEND_ENV", "backend", "default_interpret", "legal_tile",
+    "on_tpu", "PlanCache", "cache_path", "plan_key", "spec_signature",
+    "KERNELS", "KernelDescriptor", "ProblemShape", "get_kernel",
+    "predicted_step_bytes", "serve_kernels", "SMOKE_BUDGET", "TuneBudget",
+    "TuneResult", "autotune", "candidate_plans", "heuristic_plan",
+    "plan_label", "problem_shape", "tune", "tune_standalone",
+    "plan_cache", "resolve", "plan_report",
+]
+
+_PLAN_CACHE: Optional[PlanCache] = None
+
+
+def plan_cache(reload: bool = False) -> PlanCache:
+    """The process-wide plan cache (``REPRO_PLAN_CACHE`` location).
+
+    Loaded lazily once; ``reload=True`` re-reads the file (tests, or after
+    an external tuner wrote new entries).
+    """
+    global _PLAN_CACHE
+    if _PLAN_CACHE is None or reload:
+        _PLAN_CACHE = PlanCache(cache_path())
+    return _PLAN_CACHE
+
+
+def resolve(cfg, n_queries: int, *, backend_name: Optional[str] = None,
+            chunk_log: int = 12, collective: str = "gather"):
+    """A plan for (cfg, bucket): tuned on cache hit, heuristic on miss.
+
+    The tuned plan keeps its measured tiling (including chunk_log); only
+    the collective — a topology choice the tuner does not measure — is
+    taken from the caller. The miss path is ``heuristic_plan``, i.e. the
+    pre-engine ``plan_for`` verbatim.
+    """
+    be = backend_name or backend()
+    hit = plan_cache().get(be, cfg.protocol, spec_signature(cfg), n_queries)
+    if hit is not None:
+        return _replace(hit, collective=collective)
+    plan = heuristic_plan(cfg, n_queries, backend=be, chunk_log=chunk_log)
+    return _replace(plan, collective=collective)
+
+
+def plan_report(cfg, plan, bucket: int, *, n_shards: int = 1) -> dict:
+    """Reporting row for one bucket's chosen plan: provenance + the
+    modeled HBM bytes its answer step moves (dry-run / launch surfaces)."""
+    from repro.core import protocol as protocol_mod
+    proto = protocol_mod.get(cfg.protocol)
+    shape = problem_shape(cfg, bucket, n_shards=n_shards)
+    return {
+        "plan": plan.name,
+        "label": plan_label(plan),
+        "provenance": plan.provenance,
+        "predicted_step_bytes": predicted_step_bytes(
+            plan, proto.share_kind, shape),
+    }

@@ -1,0 +1,10 @@
+"""``python -m repro.engine`` — the autotuner CLI (see tuner.main).
+
+A package-level entry point (rather than ``-m repro.engine.tuner``) so
+runpy doesn't double-import the tuner module through the package
+re-exports.
+"""
+from repro.engine.tuner import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,327 @@
+"""Kernel registry: descriptors over the answer-kernel bodies + feasibility.
+
+The engine's inventory of *how an answer step can run*. Each
+:class:`KernelDescriptor` wraps one existing kernel body — the materialized
+select-XOR scan (jnp oracle / Pallas ``dpxor``), the fused chunked
+expand+scan, the additive int8 GEMM (jnp dot / Pallas ``pir_matmul``), and
+the standalone GGM level expansion — and declares:
+
+  * its **tunable-parameter space** (the tile sizes that used to be
+    hardcoded constants in ``kernels/ops.py``), already normalized to
+    *legal* tiles for the concrete problem shape (``backend.legal_tile``),
+  * a **VMEM-footprint model** (``analysis/roofline.py`` constants): the
+    per-grid-step working set in bytes, streamed blocks counted twice for
+    Pallas's double-buffered pipeline. Candidates whose footprint exceeds
+    ``VMEM_BYTES`` are pruned *without running* — the tuner never wastes
+    budget timing a plan Mosaic would refuse to schedule,
+  * a **predicted-bytes model**: HBM traffic of one answer step, the
+    memory-roofline numerator that dry-run/launch reporting surfaces next
+    to each chosen plan.
+
+Serve-path descriptors (``serve=True``) emit ``ExecutionPlan`` candidates;
+the GGM expansion is registered ``serve=False`` — it is tuned standalone
+(``tuner.tune_standalone``) because DPF evaluation happens inside the
+protocol's ``answer_local``, not as a separately planned stage.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.analysis.roofline import VMEM_BYTES
+from repro.engine.backend import legal_tile
+
+U32_BYTES = 4
+
+
+@dataclass(frozen=True)
+class ProblemShape:
+    """The concrete shapes one plan candidate must serve.
+
+    bucket      Q — padded query-batch size (one compiled bucket)
+    rows        R — rows held by ONE DB shard (n_items / n_shards)
+    item_bytes  L — record payload bytes (words = L / 4)
+    """
+    bucket: int
+    rows: int
+    item_bytes: int
+
+    @property
+    def words(self) -> int:
+        return self.item_bytes // 4
+
+    @property
+    def log_rows(self) -> int:
+        return (self.rows - 1).bit_length()
+
+
+@dataclass(frozen=True)
+class KernelDescriptor:
+    """One answer-kernel body + its tunable space and validity model."""
+
+    name: str
+    share_kind: str                       # xor | additive | prg
+    #: ExecutionPlan base fields (serve kernels); empty for standalone
+    expand: str = ""
+    scan: str = ""
+    #: shape -> {param: candidate values}, already legal for that shape
+    space_fn: Callable[[ProblemShape], Dict[str, Tuple[int, ...]]] = \
+        field(default=lambda s: {})
+    #: shape, params -> per-grid-step VMEM working set (bytes)
+    footprint_fn: Callable[[ProblemShape, Dict[str, int]], int] = \
+        field(default=lambda s, p: 0)
+    #: shape, params -> HBM bytes moved by one answer step (reporting)
+    bytes_fn: Callable[[ProblemShape, Dict[str, int]], int] = \
+        field(default=lambda s, p: 0)
+    serve: bool = True
+
+    def feasible(self, shape: ProblemShape, params: Dict[str, int]) -> bool:
+        return self.footprint_fn(shape, params) <= VMEM_BYTES
+
+    def candidates(self, shape: ProblemShape,
+                   max_candidates: Optional[int] = None
+                   ) -> List[Dict[str, int]]:
+        """Feasible parameter assignments, deduped after legalization.
+
+        Two requested tiles can legalize to the same effective tile on a
+        small shape (e.g. 512 and 2048 both collapse to R=64); duplicates
+        are measured once. ``max_candidates`` is the per-kernel budget cap
+        (the CI smoke runs with 2).
+        """
+        space = self.space_fn(shape)
+        names = sorted(space)
+        combos = itertools.product(*(space[n] for n in names)) \
+            if names else [()]
+        seen, out = set(), []
+        for combo in combos:
+            params = dict(zip(names, combo))
+            key = tuple(sorted(params.items()))
+            if key in seen or not self.feasible(shape, params):
+                continue
+            seen.add(key)
+            out.append(params)
+            if max_candidates is not None and len(out) >= max_candidates:
+                break
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+KERNELS: Dict[str, KernelDescriptor] = {}
+
+
+def register_kernel(desc: KernelDescriptor) -> KernelDescriptor:
+    KERNELS[desc.name] = desc
+    return desc
+
+
+def serve_kernels(share_kind: str) -> List[KernelDescriptor]:
+    """Serve-path descriptors for one share algebra, registry order."""
+    return [d for d in KERNELS.values()
+            if d.serve and d.share_kind == share_kind]
+
+
+def get_kernel(name: str) -> KernelDescriptor:
+    if name not in KERNELS:
+        raise KeyError(
+            f"unknown kernel {name!r}; registered: {sorted(KERNELS)}")
+    return KERNELS[name]
+
+
+# ---------------------------------------------------------------------------
+# Descriptor bodies: spaces, VMEM footprints, byte models
+# ---------------------------------------------------------------------------
+# Requested tile ladders (the pre-engine hardcoded constants are members,
+# so the heuristic plan is always inside the search space).
+_DPXOR_TILES = (512, 1024, 2048, 4096)
+_GEMM_TILE_Q = (8, 16)
+_GEMM_TILE_R = (512, 1024, 2048)
+_GEMM_TILE_L = (128, 256)
+_FUSED_CHUNK_LOGS = (8, 10, 12, 14)
+_GGM_TILES = (512, 2048, 8192, 65536)
+
+#: the GEMM reduction-tile default before tiles moved into the plan
+#: (``kernels/ops.py pir_gemm`` hardcoded 1024 vs the scan's 2048)
+GEMM_TILE_R_DEFAULT = 1024
+
+
+def _xor_scan_space(shape: ProblemShape) -> Dict[str, Tuple[int, ...]]:
+    tiles = sorted({legal_tile(shape.rows, t, pow2=True)
+                    for t in _DPXOR_TILES})
+    return {"tile_r": tuple(tiles)}
+
+
+def _xor_scan_footprint(shape: ProblemShape, p: Dict[str, int]) -> int:
+    q, w = shape.bucket, shape.words
+    tr = p.get("tile_r", legal_tile(shape.rows, 2048, pow2=True))
+    # streamed blocks ×2 (double buffer): bits [Q,TR] + db [W,TR];
+    # resident: accumulator [Q,W] + the masked intermediate [Q,W,TR]
+    return U32_BYTES * (2 * (q * tr + w * tr) + q * w + q * w * tr)
+
+
+def _xor_mat_bytes(shape: ProblemShape, p: Dict[str, int],
+                   *, pallas: bool) -> int:
+    q, r, w = shape.bucket, shape.rows, shape.words
+    bits = 2 * q * r * U32_BYTES          # materialized: written then read
+    db = (1 if pallas else q) * r * w * U32_BYTES   # jnp vmap re-reads/query
+    return bits + db + q * w * U32_BYTES
+
+
+def _fused_space(shape: ProblemShape) -> Dict[str, Tuple[int, ...]]:
+    # chunks larger than the shard are degenerate duplicates (n_chunks=1)
+    logs = sorted({min(c, shape.log_rows) for c in _FUSED_CHUNK_LOGS})
+    return {"chunk_log": tuple(logs)}
+
+
+def _fused_footprint(shape: ProblemShape, p: Dict[str, int]) -> int:
+    chunk = 1 << p.get("chunk_log", 12)
+    # per-chunk working set: db rows + selection bits (never hit HBM)
+    return U32_BYTES * chunk * (2 * shape.words + 1)
+
+
+def _fused_bytes(shape: ProblemShape, p: Dict[str, int]) -> int:
+    # every query streams the whole shard once; bits stay on-chip
+    return (shape.bucket * shape.rows * shape.words + shape.bucket
+            * shape.words) * U32_BYTES
+
+
+def _gemm_space(shape: ProblemShape) -> Dict[str, Tuple[int, ...]]:
+    return {
+        "tile_q": tuple(sorted({legal_tile(shape.bucket, t)
+                                for t in _GEMM_TILE_Q})),
+        "tile_r": tuple(sorted({legal_tile(shape.rows, t)
+                                for t in _GEMM_TILE_R})),
+        "tile_l": tuple(sorted({legal_tile(shape.item_bytes, t)
+                                for t in _GEMM_TILE_L})),
+    }
+
+
+def _gemm_footprint(shape: ProblemShape, p: Dict[str, int]) -> int:
+    tq = p.get("tile_q", legal_tile(shape.bucket, 8))
+    tr = p.get("tile_r", legal_tile(shape.rows, GEMM_TILE_R_DEFAULT))
+    tl = p.get("tile_l", legal_tile(shape.item_bytes, 128))
+    # int8 streamed blocks ×2; int32 output block resident
+    return 2 * (tq * tr + tr * tl) + 4 * tq * tl
+
+
+def _gemm_bytes(shape: ProblemShape, p: Dict[str, int]) -> int:
+    q, r, l = shape.bucket, shape.rows, shape.item_bytes
+    # shares materialized (write+read, int8) + one DB pass + int32 out
+    return 2 * q * r + r * l + 4 * q * l
+
+
+def _ggm_space(shape: ProblemShape) -> Dict[str, Tuple[int, ...]]:
+    n = shape.rows                         # leaves at the widest level
+    return {"tile": tuple(sorted({legal_tile(n, t) for t in _GGM_TILES}))}
+
+
+def _ggm_footprint(shape: ProblemShape, p: Dict[str, int]) -> int:
+    tile = p.get("tile", 65536)
+    # 16 ChaCha state rows + (4 seed + 1 t) in ×2 + (8 child + 2 t) out
+    return U32_BYTES * tile * (16 + 2 * 5 + 10)
+
+
+MATERIALIZE_JNP = register_kernel(KernelDescriptor(
+    name="xor-materialize-jnp", share_kind="xor",
+    expand="materialize", scan="jnp",
+    bytes_fn=lambda s, p: _xor_mat_bytes(s, p, pallas=False),
+))
+
+MATERIALIZE_PALLAS = register_kernel(KernelDescriptor(
+    name="xor-materialize-pallas", share_kind="xor",
+    expand="materialize", scan="pallas",
+    space_fn=_xor_scan_space, footprint_fn=_xor_scan_footprint,
+    bytes_fn=lambda s, p: _xor_mat_bytes(s, p, pallas=True),
+))
+
+FUSED_XOR = register_kernel(KernelDescriptor(
+    name="xor-fused", share_kind="xor",
+    expand="fused", scan="jnp",
+    space_fn=_fused_space, footprint_fn=_fused_footprint,
+    bytes_fn=_fused_bytes,
+))
+
+GEMM_JNP = register_kernel(KernelDescriptor(
+    name="gemm-jnp", share_kind="additive",
+    expand="materialize", scan="jnp",
+    bytes_fn=_gemm_bytes,
+))
+
+GEMM_PALLAS = register_kernel(KernelDescriptor(
+    name="gemm-pallas", share_kind="additive",
+    expand="materialize", scan="pallas",
+    space_fn=_gemm_space, footprint_fn=_gemm_footprint,
+    bytes_fn=_gemm_bytes,
+))
+
+GGM_EXPAND = register_kernel(KernelDescriptor(
+    name="ggm-expand", share_kind="prg", serve=False,
+    space_fn=_ggm_space, footprint_fn=_ggm_footprint,
+))
+
+
+# ---------------------------------------------------------------------------
+# Plan <-> descriptor bridges
+# ---------------------------------------------------------------------------
+
+def plans_from_kernel(desc: KernelDescriptor, shape: ProblemShape, *,
+                      base_plan, max_candidates: Optional[int] = None):
+    """ExecutionPlan candidates of one serve descriptor for one shape.
+
+    ``base_plan`` supplies the non-kernel axes (collective, default
+    chunk_log); tunables overwrite their plan fields. Parameter names in
+    descriptor spaces deliberately match ``ExecutionPlan`` field names.
+    """
+    if not desc.serve:
+        raise ValueError(f"{desc.name} is not a serve-path kernel")
+    out = []
+    for params in desc.candidates(shape, max_candidates):
+        out.append(replace(base_plan, expand=desc.expand, scan=desc.scan,
+                           **params))
+    if not out:
+        # a descriptor with an empty (or fully pruned) space still offers
+        # its base form — e.g. the jnp oracles have no tunables
+        if desc.space_fn(shape) == {} and desc.feasible(shape, {}):
+            out.append(replace(base_plan, expand=desc.expand,
+                               scan=desc.scan))
+    return out
+
+
+def descriptor_for_plan(plan, share_kind: str) -> KernelDescriptor:
+    """The registered descriptor a plan executes on (for byte models).
+
+    Matching mirrors ``answer_local`` dispatch: additive protocols ignore
+    ``expand`` (the GEMM always materializes its share matrix), so any
+    additive plan — including a legacy ``path="fused"`` one — maps to the
+    GEMM descriptor of its ``scan``; the fused XOR body ignores ``scan``
+    (its inner fold is always the jnp dpxor).
+    """
+    for d in serve_kernels(share_kind):
+        if share_kind == "additive":
+            if d.scan == plan.scan:
+                return d
+        elif d.expand == plan.expand and (plan.expand == "fused"
+                                          or d.scan == plan.scan):
+            return d
+    raise KeyError(f"no registered kernel for plan {plan.name!r} "
+                   f"({share_kind})")
+
+
+def plan_params(plan) -> Dict[str, int]:
+    """The tunable fields of a plan, as a descriptor params dict."""
+    return {"tile_r": plan.tile_r, "tile_q": plan.tile_q,
+            "tile_l": plan.tile_l, "chunk_log": plan.chunk_log}
+
+
+def predicted_step_bytes(plan, share_kind: str, shape: ProblemShape) -> int:
+    """Modeled HBM bytes one answer step moves under ``plan`` (per shard).
+
+    The memory-roofline numerator (`analysis/roofline.py` HBM_BW divides
+    it into a time bound); surfaced by dry-run and launch reporting next
+    to each bucket's chosen plan.
+    """
+    desc = descriptor_for_plan(plan, share_kind)
+    return desc.bytes_fn(shape, plan_params(plan))

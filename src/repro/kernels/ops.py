@@ -17,6 +17,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.engine.backend import default_interpret, legal_tile, on_tpu
 from repro.kernels.dpxor import dpxor_t
 from repro.kernels.ggm_expand import ggm_expand_level
 from repro.kernels.pir_matmul import pir_matmul
@@ -25,12 +26,16 @@ U32 = jnp.uint32
 
 
 def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+    """Compat alias — backend probing now lives in ``engine/backend.py``
+    (one probe for plan selection AND interpret defaults, overridable via
+    ``REPRO_FORCE_BACKEND``)."""
+    return on_tpu()
 
 
-def default_interpret() -> bool:
-    """Interpret-mode default: real Mosaic only on an actual TPU backend."""
-    return not _on_tpu()
+# ``default_interpret`` is re-exported from engine.backend unchanged: real
+# Mosaic only on an (effective) TPU backend.
+__all__ = ["default_interpret", "dpxor", "dpxor_transposed", "ggm_expand",
+           "ggm_eval_leaves", "pir_gemm"]
 
 
 # ---------------------------------------------------------------------------
@@ -44,10 +49,16 @@ def dpxor(db_words: jax.Array, bits: jax.Array, *, tile_r: int = 2048,
     Transposes to the kernel's word-major layout; production servers keep
     the DB pre-transposed and call :func:`dpxor_transposed` to avoid paying
     the transpose per query batch.
+
+    ``tile_r`` is a *request*: the engine legalizes it to the largest
+    power-of-two divisor of the row count (``engine.legal_tile``) — the
+    old ``min(tile_r, R)`` clamp produced illegal tiles on
+    non-power-of-two row counts.
     """
     if interpret is None:
         interpret = default_interpret()
-    return dpxor_t(db_words.T, bits, tile_r=min(tile_r, db_words.shape[0]),
+    return dpxor_t(db_words.T, bits,
+                   tile_r=legal_tile(db_words.shape[0], tile_r, pow2=True),
                    interpret=interpret)
 
 
@@ -56,7 +67,8 @@ def dpxor_transposed(db_t: jax.Array, bits: jax.Array, *, tile_r: int = 2048,
     """Select-XOR scan on a pre-transposed [W, R] DB shard."""
     if interpret is None:
         interpret = default_interpret()
-    return dpxor_t(db_t, bits, tile_r=min(tile_r, db_t.shape[1]),
+    return dpxor_t(db_t, bits,
+                   tile_r=legal_tile(db_t.shape[1], tile_r, pow2=True),
                    interpret=interpret)
 
 
@@ -83,7 +95,7 @@ def ggm_expand(seeds: jax.Array, t_bits: jax.Array, cw_seed: jax.Array,
     n = seeds.shape[0]
     children_t, t2 = ggm_expand_level(
         seeds.T, t_bits, cw_seed, cw_t,
-        rounds=rounds, tile=min(tile, n), interpret=interpret,
+        rounds=rounds, tile=legal_tile(n, tile), interpret=interpret,
     )
     # children_t: [8, n] (rows 0:4 = left seed words, 4:8 = right).
     left = children_t[0:4, :].T                   # [n, 4]
@@ -116,13 +128,19 @@ def ggm_eval_leaves(key_root: jax.Array, key_t0: jax.Array,
 def pir_gemm(shares: jax.Array, db_bytes: jax.Array, *, tile_q: int = 8,
              tile_r: int = 1024, tile_l: int = 128,
              interpret: bool | None = None) -> jax.Array:
-    """Batched additive-PIR contraction: [Q, R] i8 × [R, L] i8 -> [Q, L] i32."""
+    """Batched additive-PIR contraction: [Q, R] i8 × [R, L] i8 -> [Q, L] i32.
+
+    Requested tiles legalize to the largest divisor of their dimension
+    (``engine.legal_tile``), so non-power-of-two shapes pick a working
+    tiling instead of tripping ``pir_matmul``'s divisibility check.
+    """
     if interpret is None:
         interpret = default_interpret()
     q, r = shares.shape
     l = db_bytes.shape[1]
     return pir_matmul(
         shares, db_bytes,
-        tile_q=min(tile_q, q), tile_r=min(tile_r, r), tile_l=min(tile_l, l),
+        tile_q=legal_tile(q, tile_q), tile_r=legal_tile(r, tile_r),
+        tile_l=legal_tile(l, tile_l),
         interpret=interpret,
     )

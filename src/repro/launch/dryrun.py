@@ -162,7 +162,10 @@ def lower_pir_cell(pir_name: str, multi_pod: bool, *, path: str = "fused",
     n_chips = 512 if multi_pod else 256
     t0 = time.time()
     with mesh:
-        fns = build_serve_fn(cfg, mesh, n_queries=n_queries, path=path,
+        # path="auto" resolves through the engine plane: plan-cache hit ->
+        # tuned plan, miss -> the plan_for heuristic (DESIGN.md §9)
+        fns = build_serve_fn(cfg, mesh, n_queries=n_queries,
+                             path=None if path == "auto" else path,
                              collective=collective, chunk_log=chunk_log)
         keys = key_specs(cfg, n_queries)
         # the struct of the protocol's declared view (words for XOR, int8
@@ -188,6 +191,11 @@ def lower_pir_cell(pir_name: str, multi_pod: bool, *, path: str = "fused",
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "n_queries": n_queries, "collective": collective,
         "chunk_log": chunk_log,
+        # engine-plane provenance: which kernel path this cell compiled
+        # to, how it was chosen, and the modeled per-device HBM bytes of
+        # one answer step (the memory-roofline numerator)
+        "plan": fns.plan.describe(),
+        "plan_predicted_bytes": fns.plan_report()["predicted_step_bytes"],
         "memory": _mem_dict(mem),
         **roof.to_dict(),
     }
@@ -225,7 +233,8 @@ def main(argv=None) -> int:
     ap.add_argument("--shape", default=None, help="shape cell name")
     ap.add_argument("--pir", default=None, help="PIR config name")
     ap.add_argument("--pir-path", default="fused",
-                    choices=["baseline", "fused", "matmul"])
+                    choices=["baseline", "fused", "matmul", "pallas",
+                             "auto"])
     ap.add_argument("--pir-collective", default="gather",
                     choices=["gather", "butterfly"])
     ap.add_argument("--pir-chunk-log", type=int, default=12)

@@ -343,7 +343,10 @@ class PIRStep(NamedTuple):
     ``answer`` takes either a ``ShardedDatabase`` (the database plane
     resolves the protocol's declared view per dispatch — DESIGN.md §8) or
     that view's raw device array; ``db_view`` names which view the
-    compiled steps contract against.
+    compiled steps contract against. ``plan_report`` surfaces each
+    bucket's resolved plan — kernel path, provenance (tuned vs heuristic
+    vs forced), predicted step bytes — resolved once at build time by the
+    engine plane (DESIGN.md §9), never on the dispatch path.
     """
     answer: Callable           # (db, keys) -> [bucket, ...] shares (async)
     stage_keys: Callable       # keys -> padded + device_put keys
@@ -351,6 +354,7 @@ class PIRStep(NamedTuple):
     db_sharding: NamedSharding
     n_compiles: Callable[[], int]    # cache-miss counter (tests/benches)
     db_view: str = "words"
+    plan_report: Callable[[], Dict[int, dict]] = lambda: {}
 
 
 def make_pir_serve_step(
@@ -389,4 +393,5 @@ def make_pir_serve_step(
     return PIRStep(answer=bucketed.answer, stage_keys=bucketed.stage,
                    buckets=bucketed.buckets, db_sharding=db_sharding,
                    n_compiles=lambda: bucketed.n_compiles,
-                   db_view=bucketed.protocol.db_view)
+                   db_view=bucketed.protocol.db_view,
+                   plan_report=bucketed.plan_report)

@@ -1,0 +1,379 @@
+"""Engine-plane tests: backend probe, legal tiling, search-space parity,
+plan cache robustness, and the heuristic-fallback equivalence gate.
+
+Fast tier: everything here runs eager or through small interpret-mode
+kernel jits (log N <= 6 DBs, tiny tune budgets) — no serve-step compiles.
+
+The two load-bearing guarantees (ISSUE 5 acceptance):
+  * every candidate plan in the search space produces byte-identical
+    answers (the tuner can never trade correctness for speed);
+  * an empty/corrupted/stale plan cache resolves to exactly the pre-engine
+    ``plan_for`` choices (asserted against an inline replica of the old
+    rules), so default behavior is unchanged bit-for-bit.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import engine
+from repro.config import PIRConfig
+from repro.core import pir
+from repro.core import protocol as protocol_mod
+from repro.core.protocol import ExecutionPlan, plan_for, resolve_plan
+from repro.engine.backend import FORCE_BACKEND_ENV, legal_tile
+from repro.engine.cache import PlanCache, spec_signature
+from repro.engine.kernels import ProblemShape
+from repro.engine.tuner import TuneBudget, plan_label
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(23)
+LOG_N = 6
+N = 1 << LOG_N
+
+
+# ---------------------------------------------------------------------------
+# backend probe + legal tiles
+# ---------------------------------------------------------------------------
+
+def test_backend_probe_and_force_override(monkeypatch):
+    monkeypatch.delenv(FORCE_BACKEND_ENV, raising=False)
+    assert engine.backend() == jax.default_backend()
+    # kernels/ops.py interpret default and plan selection read ONE probe
+    assert ops.default_interpret() == (engine.backend() != "tpu")
+    monkeypatch.setenv(FORCE_BACKEND_ENV, "tpu")
+    assert engine.backend() == "tpu"
+    assert ops.default_interpret() is False
+    # plan selection is pinned too: CI can force the TPU plan rules on CPU
+    plan = plan_for(PIRConfig(n_items=N), 4)
+    assert plan.scan == "pallas"
+    monkeypatch.setenv(FORCE_BACKEND_ENV, "cpu")
+    assert plan_for(PIRConfig(n_items=N), 4).scan == "jnp"
+
+
+def test_legal_tile_rules():
+    # divides evenly: the request is kept
+    assert legal_tile(4096, 2048, pow2=True) == 2048
+    assert legal_tile(64, 2048, pow2=True) == 64
+    # non-power-of-two dims: largest pow2 divisor <= request
+    assert legal_tile(96, 2048, pow2=True) == 32
+    assert legal_tile(96, 16, pow2=True) == 16
+    # non-pow2 mode: largest divisor <= request
+    assert legal_tile(1536, 1024) == 768
+    assert legal_tile(192, 128) == 96
+    assert legal_tile(7, 4) == 1          # prime rows: only 1 divides
+    with pytest.raises(ValueError):
+        legal_tile(0, 8)
+    with pytest.raises(ValueError):
+        legal_tile(8, 0)
+
+
+def test_ops_non_pow2_shard_shapes_regression():
+    """min(tile, R) used to emit illegal tiles on non-pow2 row counts —
+    the engine's legal-tile computation must pick a working tiling."""
+    db = jnp.asarray(RNG.integers(0, 1 << 32, size=(96, 8),
+                                  dtype=np.uint32))
+    bits = jnp.asarray(RNG.integers(0, 2, size=(2, 96), dtype=np.uint32))
+    got = ops.dpxor(db, bits)             # default request 2048 -> tile 32
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.dpxor_ref(db, bits)))
+
+    s = jnp.asarray(RNG.integers(-128, 128, size=(2, 192), dtype=np.int8))
+    d = jnp.asarray(RNG.integers(-128, 128, size=(192, 32), dtype=np.int8))
+    got = ops.pir_gemm(s, d, tile_r=128)  # 128 does not divide 192 -> 96
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.pir_matmul_ref(s, d)))
+
+
+# ---------------------------------------------------------------------------
+# heuristic fallback == the pre-engine plan_for, bit for bit
+# ---------------------------------------------------------------------------
+
+def _pre_engine_plan_for(cfg, n_queries, backend, chunk_log=12):
+    """Inline replica of the pre-PR ``core.protocol.plan_for`` body."""
+    scan = "pallas" if backend == "tpu" else "jnp"
+    proto = protocol_mod.get(cfg.protocol)
+    if proto.share_kind == "additive":
+        # tiles were then hardcoded in kernels/ops.py: gemm tile_r=1024
+        return ExecutionPlan(expand="materialize", scan=scan,
+                             chunk_log=chunk_log, tile_r=1024)
+    small_db = cfg.n_items <= (1 << chunk_log)
+    expand = "materialize" if small_db or n_queries <= 1 else "fused"
+    return ExecutionPlan(expand=expand, scan=scan, chunk_log=chunk_log)
+
+
+@pytest.mark.parametrize("protocol", ["xor-dpf-2", "additive-dpf-2",
+                                      "xor-dpf-k"])
+def test_heuristic_reproduces_pre_engine_plan_for(protocol):
+    for n_items in (1 << 10, 1 << 14, 1 << 20):
+        cfg = PIRConfig(n_items=n_items, protocol=protocol, n_servers=3)
+        for n_q in (1, 4, 32):
+            for be in ("cpu", "tpu"):
+                want = _pre_engine_plan_for(cfg, n_q, be)
+                assert plan_for(cfg, n_q, backend=be) == want
+                # a cache miss must resolve identically (the fallback)
+                got = engine.resolve(cfg, n_q, backend_name=be)
+                if engine.plan_cache().get(be, cfg.protocol,
+                                           spec_signature(cfg), n_q) is None:
+                    assert got == want
+                    assert got.provenance == "heuristic"
+
+
+def test_resolve_plan_paths_and_provenance():
+    cfg = PIRConfig(n_items=N)
+    forced = resolve_plan("fused", cfg, 4, chunk_log=9)
+    assert forced.provenance == "forced" and forced.chunk_log == 9
+    # additive forced paths pin the GEMM reduction tile to the pre-engine
+    # kernel default (ops.py used 1024, the scan used 2048)
+    add = resolve_plan("matmul", PIRConfig(n_items=N,
+                                           protocol="additive-dpf-2"), 4)
+    assert add.tile_r == 1024
+    assert plan_for(cfg, 4, backend="cpu").provenance == "heuristic"
+
+
+# ---------------------------------------------------------------------------
+# search space: feasibility pruning + answer parity across ALL candidates
+# ---------------------------------------------------------------------------
+
+def test_candidate_space_prunes_infeasible_tiles():
+    shape_ok = ProblemShape(bucket=32, rows=1 << 20, item_bytes=32)
+    desc = engine.get_kernel("xor-materialize-pallas")
+    tiles_ok = {p["tile_r"] for p in desc.candidates(shape_ok)}
+    assert 4096 in tiles_ok               # 32q x 8w x 4096 x 4B = 4 MB: fits
+    shape_big = ProblemShape(bucket=256, rows=1 << 20, item_bytes=32)
+    tiles_big = {p["tile_r"] for p in desc.candidates(shape_big)}
+    assert 4096 not in tiles_big          # 256q: 32 MB intermediate: pruned
+    assert 512 in tiles_big               # but the space never goes empty
+    # pruning happens before measurement: candidates() is pure arithmetic
+    assert all(desc.feasible(shape_big, {"tile_r": t}) for t in tiles_big)
+
+
+def test_fused_chunk_space_clips_to_shard():
+    cands = engine.get_kernel("xor-fused").candidates(
+        ProblemShape(bucket=4, rows=N, item_bytes=32))
+    logs = {p["chunk_log"] for p in cands}
+    assert logs == {LOG_N}                # chunks > shard are degenerate
+
+
+def test_candidate_plans_cover_registered_kernels():
+    """Every registered serve kernel of a share algebra contributes at
+    least one candidate, and tile fields arrive legalized (fast-tier
+    structural complement of the slow parity sweep below)."""
+    cfg = PIRConfig(n_items=N)
+    names = {(p.expand, p.scan) for p in engine.candidate_plans(cfg, 2)}
+    assert names == {("materialize", "jnp"), ("materialize", "pallas"),
+                     ("fused", "jnp")}
+    for p in engine.candidate_plans(cfg, 2):
+        if p.scan == "pallas":
+            assert N % p.tile_r == 0 and p.tile_r & (p.tile_r - 1) == 0
+    cfga = PIRConfig(n_items=N, protocol="additive-dpf-2")
+    names_a = {(p.expand, p.scan) for p in engine.candidate_plans(cfga, 2)}
+    assert names_a == {("materialize", "jnp"), ("materialize", "pallas")}
+    for p in engine.candidate_plans(cfga, 2):
+        if p.scan == "pallas":
+            assert N % p.tile_r == 0 and 2 % p.tile_q == 0 \
+                and 32 % p.tile_l == 0
+
+
+def test_ggm_descriptor_registered_with_space():
+    desc = engine.get_kernel("ggm-expand")
+    assert not desc.serve                 # tuned standalone, not in plans
+    cands = desc.candidates(ProblemShape(bucket=1, rows=1 << 16,
+                                         item_bytes=4))
+    assert {p["tile"] for p in cands} <= {512, 2048, 8192, 65536}
+    assert cands                          # something survives pruning
+
+
+@pytest.mark.slow          # ~30 s of XLA compile per candidate plan here
+@pytest.mark.parametrize("protocol,n_servers", [
+    ("xor-dpf-2", 2), ("additive-dpf-2", 2), ("xor-dpf-k", 3),
+])
+def test_all_candidate_plans_answer_identically(protocol, n_servers):
+    """Byte parity across the whole search space, per registered protocol:
+    whatever the tuner picks, the answer shares cannot change.
+
+    Slow tier: each candidate plan is a fresh jit of ``answer_local``
+    (~30 s compile on this container). The fast tier keeps per-kernel
+    oracle parity (tests/test_kernels.py, tests/test_protocols.py) and
+    ``test_candidate_plans_cover_registered_kernels`` below; the CI gate
+    additionally measures two tunes end-to-end
+    (``python -m repro.engine --smoke``)."""
+    cfg = PIRConfig(n_items=N, protocol=protocol, n_servers=n_servers)
+    proto = protocol_mod.get(cfg.protocol)
+    db_words = pir.make_database(np.random.default_rng(5), N, 32)
+    if proto.db_view == "bytes":
+        from repro.db import DatabaseSpec
+        db = jnp.asarray(DatabaseSpec.from_config(cfg)
+                         .words_to_bytes_host(db_words).view(np.int8))
+    else:
+        db = jnp.asarray(db_words)
+    keys = pir.batch_queries(np.random.default_rng(6), [3, N - 2], cfg)[0]
+
+    plans = engine.candidate_plans(cfg, 2)
+    assert len(plans) >= 2                # always >1 way to run a step
+    ref_ans = None
+    for plan in plans:
+        fn = jax.jit(lambda d, k, p=plan: proto.answer_local(d, k, 0,
+                                                             LOG_N, p))
+        ans = np.asarray(jax.block_until_ready(fn(db, keys)))
+        if ref_ans is None:
+            ref_ans = ans
+        else:
+            np.testing.assert_array_equal(
+                ans, ref_ans, err_msg=f"plan {plan_label(plan)} diverged")
+
+
+# ---------------------------------------------------------------------------
+# plan cache: round-trip, corruption, stale schema
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_roundtrip(tmp_path):
+    path = str(tmp_path / "plans.json")
+    cache = PlanCache(path)
+    plan = ExecutionPlan(expand="fused", scan="jnp", chunk_log=10,
+                         tile_r=512, provenance="tuned")
+    cfg = PIRConfig(n_items=N)
+    cache.put("cpu", cfg.protocol, spec_signature(cfg), 4, plan,
+              meta={"tuned_s": 0.001})
+    assert cache.save() is not None
+    re = PlanCache(path)
+    hit = re.get("cpu", cfg.protocol, spec_signature(cfg), 4)
+    assert hit == plan and hit.provenance == "tuned"
+    assert re.get("cpu", cfg.protocol, spec_signature(cfg), 8) is None
+    assert re.get("tpu", cfg.protocol, spec_signature(cfg), 4) is None
+
+
+def test_engine_resolve_uses_cache_hit(tmp_path, monkeypatch):
+    path = str(tmp_path / "plans.json")
+    cfg = PIRConfig(n_items=N)
+    tuned = ExecutionPlan(expand="fused", scan="jnp", chunk_log=5,
+                          provenance="tuned")
+    c = PlanCache(path)
+    c.put("cpu", cfg.protocol, spec_signature(cfg), 4, tuned)
+    c.save()
+    monkeypatch.setenv("REPRO_PLAN_CACHE", path)
+    monkeypatch.setenv(FORCE_BACKEND_ENV, "cpu")
+    engine.plan_cache(reload=True)
+    try:
+        got = engine.resolve(cfg, 4, collective="butterfly")
+        assert got.provenance == "tuned"
+        # tuned tiling survives; only the (untuned) collective is caller's
+        assert got.chunk_log == 5 and got.collective == "butterfly"
+        # other buckets still miss -> heuristic
+        assert engine.resolve(cfg, 8).provenance == "heuristic"
+        # the serving stack resolves through the same seam
+        assert resolve_plan(None, cfg, 4).provenance == "tuned"
+        assert resolve_plan("auto", cfg, 8).provenance == "heuristic"
+    finally:
+        monkeypatch.delenv("REPRO_PLAN_CACHE")
+        monkeypatch.delenv(FORCE_BACKEND_ENV)
+        engine.plan_cache(reload=True)
+
+
+@pytest.mark.parametrize("payload", [
+    "{not json at all",                                        # corrupted
+    json.dumps({"schema": 999, "plans": {}}),                  # stale schema
+    json.dumps({"schema": 1, "plans": {"k": {"plan": {
+        "expand": "materialize", "scan": "jnp", "warp": 9}}}}),  # bad field
+    json.dumps({"schema": 1, "plans": []}),                    # malformed
+])
+def test_plan_cache_degrades_to_heuristic(tmp_path, monkeypatch, payload):
+    path = str(tmp_path / "plans.json")
+    with open(path, "w") as f:
+        f.write(payload)
+    cache = PlanCache(path)                # must not raise
+    assert len(cache) == 0
+    assert cache.load_error is not None
+    monkeypatch.setenv("REPRO_PLAN_CACHE", path)
+    engine.plan_cache(reload=True)
+    try:
+        cfg = PIRConfig(n_items=N)
+        got = engine.resolve(cfg, 4, backend_name="cpu")
+        assert got == plan_for(cfg, 4, backend="cpu")
+        assert got.provenance == "heuristic"
+    finally:
+        monkeypatch.delenv("REPRO_PLAN_CACHE")
+        engine.plan_cache(reload=True)
+
+
+def test_plan_cache_disabled_via_env(monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_CACHE", "off")
+    assert engine.cache_path() is None
+    cache = engine.plan_cache(reload=True)
+    assert cache.path is None and cache.save() is None
+    monkeypatch.delenv("REPRO_PLAN_CACHE")
+    engine.plan_cache(reload=True)
+
+
+# ---------------------------------------------------------------------------
+# measured tuner (tiny budget) + build-time plan resolution
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow          # two answer_local compiles (~30 s each here)
+def test_tuner_tiny_budget_picks_no_worse_than_heuristic(tmp_path):
+    cfg = PIRConfig(n_items=1 << 8, item_bytes=32)
+    cache = PlanCache(str(tmp_path / "plans.json"))
+    budget = TuneBudget(max_candidates=1, warmup=1, iters=1,
+                        max_seconds=60.0)
+    res = engine.tune(cfg, 2, budget=budget, cache=cache)
+    assert res.plan.provenance == "tuned"
+    assert res.tuned_s <= res.heuristic_s + 1e-9
+    assert plan_label(res.heuristic) in res.timings
+    # the winner was persisted under the engine's cache key
+    cache.save()
+    hit = PlanCache(cache.path).get(engine.backend(), cfg.protocol,
+                                    spec_signature(cfg), 2)
+    assert hit == res.plan
+
+
+def test_bucketed_serve_fns_resolve_plans_at_build_time():
+    """Plan resolution is per bucket and needs no compile: plan_for_bucket
+    and plan_report work before any serve step is built."""
+    from repro.core.server import BucketedServeFns
+    from repro.launch.mesh import make_local_mesh
+    cfg = PIRConfig(n_items=N)
+    b = BucketedServeFns(cfg, make_local_mesh(), buckets=(2, 4),
+                         path=None)
+    assert b.n_compiles == 0
+    p2, p4 = b.plan_for_bucket(2), b.plan_for_bucket(4)
+    assert p2 == resolve_plan(None, cfg, 2)
+    assert p4 == resolve_plan(None, cfg, 4)
+    assert b.plan_for_bucket(2) is p2      # cached: one resolution/bucket
+    rep = b.plan_report()
+    assert set(rep) == {2, 4}
+    for row in rep.values():
+        assert row["provenance"] in ("heuristic", "tuned")
+        assert row["predicted_step_bytes"] > 0
+    assert b.n_compiles == 0               # nothing was lowered for this
+
+
+def test_plan_report_handles_additive_fused_path():
+    """Regression: an additive protocol under the legacy ``path="fused"``
+    (dryrun's default) yields a fused/jnp plan that the GEMM ignores —
+    plan_report/descriptor mapping must follow answer_local dispatch
+    (scan only) instead of raising KeyError."""
+    from repro.core.server import BucketedServeFns
+    from repro.engine.kernels import descriptor_for_plan
+    from repro.launch.mesh import make_local_mesh
+    cfg = PIRConfig(n_items=N, protocol="additive-dpf-2")
+    plan = resolve_plan("fused", cfg, 2)
+    assert descriptor_for_plan(plan, "additive").name == "gemm-jnp"
+    b = BucketedServeFns(cfg, make_local_mesh(), buckets=(2,), path="fused")
+    rep = b.plan_report()[2]
+    assert rep["provenance"] == "forced"
+    assert rep["predicted_step_bytes"] > 0
+
+
+def test_predicted_bytes_models_are_sane():
+    cfg = PIRConfig(n_items=1 << 14)
+    fused = ExecutionPlan(expand="fused", scan="jnp")
+    mat_pl = ExecutionPlan(expand="materialize", scan="pallas")
+    rep_f = engine.plan_report(cfg, fused, 8)
+    rep_m = engine.plan_report(cfg, mat_pl, 8)
+    # the Pallas scan reads the DB once per batch; the fused path streams
+    # it once per query -> strictly more modeled traffic at Q=8
+    assert rep_f["predicted_step_bytes"] > rep_m["predicted_step_bytes"]
+    assert rep_m["provenance"] == "heuristic"

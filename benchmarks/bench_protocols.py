@@ -11,6 +11,10 @@ same ``MultiServerPIR`` facade and ``QueryScheduler``. What varies is the
   xor-dpf-2 / fused         chunked expand+scan, bits never hit HBM
   additive-dpf-2 / gemm     Z_256 shares, one int8 GEMM per batch
   xor-dpf-k(3) / fused      3-party XOR ring (k-of-k shares)
+  lwe-simple-1 / auto       single-server LWE (SimplePIR-style): int32
+                            GEMM answers via SingleServerPIR; the one-time
+                            hint build H = A^T.DB is reported separately
+                            (``hint_preprocess_s``), never inside QPS
 
 QPS counts real queries only. Note the work scales with the party count:
 a k-party cell runs k full DB scans per batch on this single device (in
@@ -29,8 +33,9 @@ import numpy as np
 from benchmarks.common import Csv, percentile, record_json
 from repro.config import PIRConfig
 from repro.core import pir
+from repro.core import protocol as protocol_mod
 from repro.launch.mesh import make_local_mesh
-from repro.runtime.serve_loop import MultiServerPIR
+from repro.runtime.serve_loop import MultiServerPIR, SingleServerPIR
 
 LOG_N = 12                      # 4096 records x 32 B (CPU-container scale)
 BUCKET = 4                      # the single compiled bucket per party
@@ -54,21 +59,41 @@ CELLS = [
      PIRConfig(n_items=1 << LOG_N, item_bytes=32, batch_queries=BUCKET,
                protocol="xor-dpf-k", n_servers=3),
      "fused"),
+    ("lwe-simple-1/auto",
+     PIRConfig(n_items=1 << LOG_N, item_bytes=32, batch_queries=BUCKET,
+               protocol="lwe-simple-1", n_servers=1),
+     "auto"),
 ]
 
 
 def _run_cell(label: str, cfg: PIRConfig, path: str, db: np.ndarray,
               indices: List[int]) -> dict:
-    system = MultiServerPIR(db, cfg, make_local_mesh(), path=path,
-                            n_queries=BUCKET, buckets=(BUCKET,))
+    proto = protocol_mod.get(cfg.protocol)
+    facade = SingleServerPIR if proto.needs_hint else MultiServerPIR
+    system = facade(db, cfg, make_local_mesh(), path=path,
+                    n_queries=BUCKET, buckets=(BUCKET,))
     k = system.n_parties
+    # hint protocols: the one-time server preprocessing (H = A^T.DB) is a
+    # per-epoch cost amortized over every query — measured apart from QPS
+    hint_s = None
+    if proto.needs_hint:
+        t0 = time.perf_counter()
+        np.asarray(system.db.hint(proto.name))
+        hint_s = time.perf_counter() - t0
     # warm every party's compiled bucket (preloading is off the clock,
     # paper §3.3); staged + host inputs share one executable per party
     system.query(indices[:BUCKET])
     # client-side Gen is off the clock (the paper's measurement boundary):
     # the identical pre-generated key stream replays into every repetition
-    queries = [pir.query_gen(np.random.default_rng(1000 + j), i, cfg).keys
-               for j, i in enumerate(indices)]
+    if proto.needs_hint:
+        # scheduler items are ((keys,), state): the secret rides along
+        queries = [proto.query_gen_full(np.random.default_rng(1000 + j),
+                                        i, cfg)
+                   for j, i in enumerate(indices)]
+    else:
+        queries = [pir.query_gen(np.random.default_rng(1000 + j), i,
+                                 cfg).keys
+                   for j, i in enumerate(indices)]
 
     walls, rep_stats = [], []
     for _ in range(REPS):
@@ -84,7 +109,7 @@ def _run_cell(label: str, cfg: PIRConfig, path: str, db: np.ndarray,
     mid = int(np.argsort(walls)[len(walls) // 2])
     wall, stats = walls[mid], rep_stats[mid]
     qps = len(indices) / wall
-    return {
+    out = {
         "protocol": cfg.protocol, "path": path, "n_parties": k,
         "wall_s": wall, "qps": qps, "qps_per_party": qps / k,
         "serve_steps": stats.batches,
@@ -92,6 +117,9 @@ def _run_cell(label: str, cfg: PIRConfig, path: str, db: np.ndarray,
         "batch_p99_ms": percentile(stats.latencies, 99) * 1e3,
         "pad_fraction": stats.pad_fraction,
     }
+    if hint_s is not None:
+        out["hint_preprocess_s"] = hint_s
+    return out
 
 
 def run() -> Csv:

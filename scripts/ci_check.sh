@@ -1,11 +1,12 @@
 #!/usr/bin/env bash
 # Fast CI gate: byte-compile every tree we ship, run the fast test tier
-# (pytest.ini defaults to -m "not slow"), then run two examples
+# (pytest.ini defaults to -m "not slow"), then run three examples
 # end-to-end: quickstart at PIR_SMOKE scale (the public serving facade —
-# TwoServerPIR over the protocol registry) and db_updates at
-# PIR_SMOKE_UPD scale (the database plane's stage/publish path on the
-# 3-server protocol), so API breakage in either plane is caught here
-# instead of by users. The k-server facade demo
+# TwoServerPIR over the protocol registry), db_updates at PIR_SMOKE_UPD
+# scale (the database plane's stage/publish path on the 3-server
+# protocol), and single_server at PIR_SMOKE_LWE scale (the hint
+# lifecycle on the 1-server LWE protocol), so API breakage in any plane
+# is caught here instead of by users. The k-server facade demo
 # (examples/multi_server.py) and the slow tier (system / sharding /
 # compile-heavy) run out-of-band:  pytest -m slow
 set -euo pipefail
@@ -20,6 +21,10 @@ python examples/quickstart.py
 # db-plane smoke: preload -> query -> stage+publish -> re-query on the
 # 3-server protocol (tiny shape, one bucket: 3 serve compiles total)
 python examples/db_updates.py
+# single-server smoke: the LWE hint lifecycle end-to-end — query with
+# hint reuse, publish -> hint delta + client cache refresh (cheap: the
+# LWE GEMM has no GGM chains, its serve step compiles in ~1 s)
+python examples/single_server.py
 # engine-plane smoke: tiny-budget autotune (interpret mode, <=2 candidates
 # per kernel, nothing persisted) + the heuristic-fallback gate — asserts
 # an empty plan cache resolves to exactly the pre-engine plan_for choices

@@ -232,7 +232,11 @@ def _implied_share_kind(protocol_name: str) -> str:
     registered ``PIRProtocol.share_kind`` attribute is authoritative —
     this fallback exists only where the config layer cannot (or should
     not yet) touch the registry."""
-    return "additive" if "additive" in protocol_name else "xor"
+    if "additive" in protocol_name:
+        return "additive"
+    if "lwe" in protocol_name:
+        return "lwe"
+    return "xor"
 
 
 @dataclass(frozen=True)
@@ -285,7 +289,7 @@ class PIRConfig:
 
     @property
     def share_kind(self) -> str:
-        """The share algebra: ``xor`` | ``additive``.
+        """The share algebra: ``xor`` | ``additive`` | ``lwe``.
 
         Consults the registered protocol (the authoritative source) when
         available; falls back to the naming convention ONLY when the

@@ -26,6 +26,13 @@ PIR_1G_ADD = PIRConfig(n_items=1 << 25, item_bytes=32,
 PIR_1G_K3 = PIRConfig(n_items=1 << 25, item_bytes=32,
                       protocol="xor-dpf-k", n_servers=3)
 
+# single-server LWE at 1 GB (beyond-paper; no non-collusion assumption).
+# Parameter selection is validated at query time (core/lwe.py params_for);
+# note the client-side A matrix at this N is PRG-regenerated at ~GB scale —
+# the 1 GB point is for plan/roofline math, not for this container.
+PIR_1G_LWE = PIRConfig(n_items=1 << 25, item_bytes=32,
+                       protocol="lwe-simple-1", n_servers=1)
+
 # CPU-container scale for tests/benches/examples
 PIR_SMOKE = PIRConfig(n_items=1 << 14, item_bytes=32, batch_queries=4)
 PIR_SMOKE_ADD = PIRConfig(n_items=1 << 14, item_bytes=32,
@@ -39,6 +46,12 @@ PIR_SMOKE_K3 = PIRConfig(n_items=1 << 12, item_bytes=32,
 PIR_SMOKE_UPD = PIRConfig(n_items=1 << 10, item_bytes=32,
                           protocol="xor-dpf-k", n_servers=3,
                           batch_queries=2)
+# single-server LWE smoke (examples/single_server.py, tests): the LWE
+# serve step is slice + int32 GEMM — no GGM chains — so it compiles far
+# faster than the DPF steps and fits the CI gate at full smoke scale
+PIR_SMOKE_LWE = PIRConfig(n_items=1 << 14, item_bytes=32,
+                          protocol="lwe-simple-1", n_servers=1,
+                          batch_queries=4)
 
 PIR_CONFIGS = {
     "pir-512m": PIR_512M,
@@ -48,8 +61,10 @@ PIR_CONFIGS = {
     "pir-8g": PIR_8G,
     "pir-1g-add": PIR_1G_ADD,
     "pir-1g-k3": PIR_1G_K3,
+    "pir-1g-lwe": PIR_1G_LWE,
     "pir-smoke": PIR_SMOKE,
     "pir-smoke-add": PIR_SMOKE_ADD,
     "pir-smoke-k3": PIR_SMOKE_K3,
     "pir-smoke-upd": PIR_SMOKE_UPD,
+    "pir-smoke-lwe": PIR_SMOKE_LWE,
 }

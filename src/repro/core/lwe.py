@@ -1,0 +1,286 @@
+"""LWE machinery for the single-server SimplePIR-style protocol (DESIGN.md §10).
+
+Scheme (linear SimplePIR over DB rows)
+--------------------------------------
+Everything lives in Z_q with q = 2^32, so "mod q" is native int32/uint32
+wraparound and the server's hot loop is a plain int32 GEMM.
+
+  client secret   s  in Z_q^n
+  public matrix   A  in Z_q^{N x n}   -- regenerated from ``a_seed`` by both
+                                         sides; NEVER shipped
+  query           ct = A.s + e + Delta * onehot(alpha)   in Z_q^N
+  server answer   ans = ct^T . D     (D = byte matrix [N, item_bytes], 0..255)
+  server hint     H  = A^T . D       in Z_q^{n x item_bytes}
+  reconstruct     noisy = ans - s^T.H = e^T.D + Delta * D[alpha]
+                  m = round(noisy / Delta) mod p        (modulus switch)
+
+with plaintext modulus p = 256 (one DB byte per slot) and scale
+Delta = q / p = 2^24. Reconstruction is exact iff the accumulated noise
+|e^T.d| stays below Delta/2 = q/(2p) for every DB column d; because
+q = Delta * p exactly, the rounding also absorbs the negative wrap
+(noise in (-Delta/2, 0) decodes to the same byte).
+
+Checkable invariants, not comments
+----------------------------------
+``LWEParams.validate(n_items)`` asserts the subgaussian tail bound
+
+    TAIL * sigma * (p - 1) * sqrt(N)  <  q / (2 p)
+
+(e^T.d is a sigma-subgaussian combination with ||d||_2 <= (p-1) sqrt(N)),
+so a parameter set that cannot decode a given DB size *raises* instead of
+silently corrupting records. ``params_for`` picks the first table row whose
+``max_items`` covers the DB and re-validates it.
+
+The shipped parameters are demonstration-grade: they make correctness and
+the noise budget *testable* on this container, they are not a security
+review (see DESIGN.md §10 for what a production deployment would change).
+
+Arithmetic notes
+----------------
+Host math runs in numpy uint64: 2^32 | 2^64, so uint64 wraparound preserves
+congruence mod q and a final ``& 0xFFFFFFFF`` lands in Z_q. Device math uses
+int32 ``dot_general`` with ``preferred_element_type=int32`` — XLA's int32
+accumulate wraps mod 2^32 natively, i.e. it *is* the Z_q contraction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LWE_Q = 1 << 32          # ciphertext modulus: native 32-bit wraparound
+LWE_P = 256              # plaintext modulus: one DB byte per slot
+TAIL = 8.0               # subgaussian tail factor for the noise bound
+
+_MASK = np.uint64(0xFFFFFFFF)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LWEParams:
+    """One LWE parameter set; all correctness conditions are methods.
+
+    n        secret dimension (hint rows)
+    sigma    Gaussian error stddev (rounded to integers at sample time)
+    p        plaintext modulus; must divide q so Delta = q/p is exact
+    a_seed   PRG seed both sides use to regenerate A (never shipped)
+    """
+    n: int
+    sigma: float
+    p: int = LWE_P
+    a_seed: int = 0x1317
+
+    @property
+    def q(self) -> int:
+        return LWE_Q
+
+    @property
+    def delta(self) -> int:
+        """Plaintext scale Delta = q/p (exact by the q % p == 0 invariant)."""
+        return LWE_Q // self.p
+
+    @property
+    def noise_budget(self) -> int:
+        """Decoding succeeds iff |accumulated noise| < q/(2p) = Delta/2."""
+        return LWE_Q // (2 * self.p)
+
+    def noise_bound(self, n_items: int) -> float:
+        """Tail bound on |e^T.d|: TAIL * sigma * (p-1) * sqrt(N)."""
+        return TAIL * self.sigma * (self.p - 1) * float(np.sqrt(n_items))
+
+    def validate(self, n_items: int) -> "LWEParams":
+        """Raise unless this parameter set decodes a DB of ``n_items`` rows.
+
+        This IS the correctness-bound assertion the protocol relies on:
+        any (n, q, p, sigma) combination that reaches the serve path has
+        passed it, so modulus switching is exact, not approximate.
+        """
+        if LWE_Q % self.p:
+            raise ValueError(f"p={self.p} must divide q=2^32 for exact Delta")
+        if self.n < 1 or self.sigma <= 0:
+            raise ValueError(f"degenerate LWE parameters: n={self.n}, "
+                             f"sigma={self.sigma}")
+        bound = self.noise_bound(n_items)
+        if bound >= self.noise_budget:
+            raise ValueError(
+                f"LWE noise bound {bound:.3g} >= budget q/(2p)="
+                f"{self.noise_budget} for N={n_items}: parameters "
+                f"(n={self.n}, sigma={self.sigma}, p={self.p}) cannot "
+                f"guarantee exact reconstruction at this DB size")
+        return self
+
+
+# Demonstration-grade ladder: (max_items, params). First row whose
+# max_items covers the DB wins; each row satisfies validate(max_items).
+# sigma shrinks as N grows to keep TAIL*sigma*(p-1)*sqrt(N) < 2^23 —
+# production SimplePIR would instead use the sqrt(N) x sqrt(N) matrix
+# layout to keep sigma cryptographically sized (DESIGN.md §10).
+PARAM_TABLE: Tuple[Tuple[int, LWEParams], ...] = (
+    (1 << 16, LWEParams(n=128, sigma=6.4)),
+    (1 << 20, LWEParams(n=512, sigma=3.2)),
+    (1 << 25, LWEParams(n=1024, sigma=0.5)),
+)
+
+
+def params_for(n_items: int) -> LWEParams:
+    """Select + validate the parameter row covering a DB of ``n_items``."""
+    for max_items, params in PARAM_TABLE:
+        if n_items <= max_items:
+            return params.validate(n_items)
+    raise ValueError(
+        f"no LWE parameter set covers N={n_items} "
+        f"(table max {PARAM_TABLE[-1][0]}); extend PARAM_TABLE with a "
+        f"row that passes LWEParams.validate({n_items})")
+
+
+# ---------------------------------------------------------------------------
+# Public matrix A (seeded; regenerated, never shipped)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=8)
+def _matrix_a_cached(a_seed: int, n: int, n_items: int) -> np.ndarray:
+    rng = np.random.default_rng(a_seed)
+    return rng.integers(0, LWE_Q, size=(n_items, n), dtype=np.uint64)
+
+
+def matrix_a(params: LWEParams, n_items: int) -> np.ndarray:
+    """A in Z_q^{N x n} as uint64 (values < 2^32), PRG-expanded from a_seed.
+
+    Cached per (seed, n, N): the client and the hint builder regenerate the
+    same matrix locally; it never crosses the wire.
+    """
+    return _matrix_a_cached(params.a_seed, params.n, n_items)
+
+
+# ---------------------------------------------------------------------------
+# Ciphertext pytree + client state
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class LWECiphertext:
+    """Batched LWE query ciphertexts: ``ct`` is int32 ``[..., N]``.
+
+    A pytree with (log_n, n) as static aux data so per-bucket jitted serve
+    fns specialize on the DB size / parameter row, mirroring DPFKey.
+    """
+    ct: jax.Array          # [..., N] int32 (Z_q elements, two's complement)
+    log_n: int
+    n: int                 # secret dimension (for key_specs parity checks)
+
+    def tree_flatten(self):
+        return (self.ct,), (self.log_n, self.n)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(ct=leaves[0], log_n=aux[0], n=aux[1])
+
+
+@dataclass
+class LWEClientState:
+    """Per-query client secret; stays on the client, never serialized."""
+    s: np.ndarray          # [n] uint64 (values < 2^32)
+    index: int
+
+
+# ---------------------------------------------------------------------------
+# Client: encrypt / reconstruct (host-side numpy, uint64 wraparound)
+# ---------------------------------------------------------------------------
+
+def encrypt(rng: np.random.Generator, index: int, n_items: int,
+            params: LWEParams) -> Tuple[LWECiphertext, LWEClientState]:
+    """ct = A.s + e + Delta*onehot(index) mod q, with fresh (s, e)."""
+    if not 0 <= index < n_items:
+        raise ValueError(f"index {index} out of range for N={n_items}")
+    a = matrix_a(params, n_items)
+    s = rng.integers(0, LWE_Q, size=params.n, dtype=np.uint64)
+    e = np.rint(rng.normal(0.0, params.sigma, size=n_items)).astype(np.int64)
+    ct = (a @ s) + e.astype(np.uint64)     # uint64 wrap preserves mod 2^32
+    ct[index] += np.uint64(params.delta)
+    ct32 = (ct & _MASK).astype(np.uint32).view(np.int32)
+    state = LWEClientState(s=s, index=index)
+    return LWECiphertext(ct=jnp.asarray(ct32), log_n=(n_items - 1).bit_length(),
+                         n=params.n), state
+
+
+def decode(answers_i32: np.ndarray, secrets: np.ndarray, hint: np.ndarray,
+           params: LWEParams) -> Tuple[np.ndarray, np.ndarray]:
+    """Modulus-switching reconstruction for a batch of queries.
+
+    answers_i32: [Q, L] int32 server answers (ct^T.D mod q)
+    secrets:     [Q, n] uint64 client secrets
+    hint:        [n, L] hint matrix H = A^T.D mod q (uint64 values < 2^32)
+
+    Returns (records [Q, L] uint8, noise [Q, L] int64) where ``noise`` is
+    the recovered centered error e^T.D — callers assert it under the
+    noise budget (the sampled form of ``LWEParams.validate``).
+    """
+    ans = np.asarray(answers_i32).view(np.uint32).astype(np.uint64)
+    noisy = (ans - (secrets.astype(np.uint64) @ hint)) & _MASK
+    delta = np.uint64(params.delta)
+    m = (((noisy + delta // np.uint64(2)) // delta) % np.uint64(params.p))
+    # centered residual noise: noisy - Delta*m, wrapped into (-q/2, q/2]
+    err = (noisy - delta * m) & _MASK
+    err = err.astype(np.int64)
+    err[err >= LWE_Q // 2] -= LWE_Q
+    return m.astype(np.uint8), err
+
+
+# ---------------------------------------------------------------------------
+# Server: hint oracle + device builders
+# ---------------------------------------------------------------------------
+
+def hint_np(params: LWEParams, db_bytes_u8: np.ndarray) -> np.ndarray:
+    """Numpy hint oracle: H = A^T.D mod q as uint64 (values < 2^32)."""
+    a = matrix_a(params, len(db_bytes_u8))
+    return (a.T @ db_bytes_u8.astype(np.uint64)) & _MASK
+
+
+def hint_build_fn(params: LWEParams, n_items: int):
+    """Device hint builder: words view [N, W] uint32 -> H [n, L] int32.
+
+    The contraction runs as an int32 GEMM (wraps mod 2^32 = mod q); A is
+    regenerated host-side from the seed and closed over as an int32 view.
+    """
+    a_t = jnp.asarray(matrix_a(params, n_items).astype(np.uint32)
+                      .view(np.int32).T)                  # [n, N]
+
+    def build(words: jax.Array) -> jax.Array:
+        from repro.crypto.packing import words_to_bytes
+        d = words_to_bytes(words).astype(jnp.int32)       # [N, L] 0..255
+        return jax.lax.dot_general(a_t, d, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.int32)
+
+    return build
+
+
+def hint_delta_fn(params: LWEParams, n_items: int):
+    """Device hint delta: H += A[rows]^T.(D_new - D_old) mod q.
+
+    Exact (not approximate): int32 wraparound keeps every partial term in
+    Z_q, so delta-updated hints match a full recompute byte-for-byte.
+    ``rows`` must be deduplicated and unpadded — a repeated row would
+    subtract its old value twice.
+    """
+    a32 = jnp.asarray(matrix_a(params, n_items).astype(np.uint32)
+                      .view(np.int32))                    # [N, n]
+
+    def delta(hint: jax.Array, rows: np.ndarray, old_words: jax.Array,
+              new_words: jax.Array) -> jax.Array:
+        from repro.crypto.packing import words_to_bytes
+        d_old = words_to_bytes(old_words).astype(jnp.int32)
+        d_new = words_to_bytes(new_words).astype(jnp.int32)
+        a_rows = a32[jnp.asarray(np.asarray(rows, np.int32))]   # [R, n]
+        upd = jax.lax.dot_general(a_rows.T, d_new - d_old,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        return hint + upd      # int32 add wraps mod q
+
+    return delta

@@ -34,6 +34,14 @@ xor-dpf-k       k>=2 servers, k-of-k XOR shares (beyond-paper, 1-private):
                 pseudorandom selection vectors. Every party scans the full
                 DB (equal work), and reconstruction is XOR over all k
                 answer shares. k = ``PIRConfig.n_servers``.
+lwe-simple-1    single-server SimplePIR-style LWE PIR (beyond-paper,
+                DESIGN.md §10): the client ships one LWE-encrypted one-hot
+                vector, the server answers with an int32 GEMM over the byte
+                DB, and reconstruction subtracts ``s^T.H`` against a
+                preprocessed hint ``H = A^T.DB`` (seeded A, never shipped)
+                before a modulus switch. No non-collusion assumption;
+                reconstruction needs per-query client state + the hint, so
+                sessions go through ``reconstruct_with``/``query_gen_full``.
 """
 from __future__ import annotations
 
@@ -142,7 +150,7 @@ def resolve_plan(path: Optional[str], cfg: PIRConfig, n_queries: int, *,
                          f"expected one of {sorted(PATH_PLANS)} or 'auto'")
     plan = replace(PATH_PLANS[path], chunk_log=chunk_log,
                    collective=collective, provenance="forced")
-    if get(cfg.protocol).share_kind == "additive":
+    if get(cfg.protocol).share_kind in ("additive", "lwe"):
         from repro.engine.kernels import GEMM_TILE_R_DEFAULT
         plan = replace(plan, tile_r=GEMM_TILE_R_DEFAULT)
     return plan
@@ -187,12 +195,17 @@ class PIRProtocol:
     """
 
     name: str = ""
-    share_kind: str = "xor"            # xor | additive (reduction algebra)
+    share_kind: str = "xor"            # xor | additive | lwe (reduction algebra)
     #: which ShardedDatabase view the contraction consumes (db/spec.py
-    #: VIEWS): "words" (u32, XOR scan) | "bytes" (int8, the GEMM). The
-    #: database plane serves the declared view; protocols never convert
-    #: inline inside the compiled step.
+    #: VIEWS): "words" (u32, XOR scan) | "bytes" (int8, the GEMM) |
+    #: "bytes32" (int32 bytes, the LWE GEMM). The database plane serves the
+    #: declared view; protocols never convert inline inside the compiled step.
     db_view: str = "words"
+    #: hint protocols (single-server LWE) need server-side preprocessing
+    #: H(db) shipped to clients once per epoch; the session layer
+    #: (``SingleServerPIR``) registers ``hint_builder`` with the database
+    #: plane and routes reconstruction through ``reconstruct_with``.
+    needs_hint: bool = False
 
     # -- client side ----------------------------------------------------
     def n_parties(self, cfg: PIRConfig) -> int:
@@ -203,9 +216,29 @@ class PIRProtocol:
         """Gen: one per-party key pytree per party, for one query index."""
         raise NotImplementedError
 
+    def query_gen_full(self, rng: np.random.Generator, index: int,
+                       cfg: PIRConfig):
+        """Gen with client state: ``(keys_tuple, state)``.
+
+        Stateless protocols (all the DPF schemes) carry no client state;
+        hint protocols return the per-query secret the reconstruction
+        needs. Sessions that support hint protocols call this form.
+        """
+        return self.query_gen(rng, index, cfg), None
+
     def reconstruct(self, answers: Sequence[jax.Array]) -> jax.Array:
         """Combine all parties' answer shares into the record."""
         raise NotImplementedError
+
+    def reconstruct_with(self, answers: Sequence[jax.Array], states, *,
+                         cfg: Optional[PIRConfig] = None, hint=None):
+        """Reconstruction with per-query client state + epoch hint.
+
+        The general client-side entry point: stateless protocols ignore
+        ``states``/``hint`` and defer to :meth:`reconstruct`; hint
+        protocols require both.
+        """
+        return self.reconstruct(answers)
 
     def record_struct(self, cfg: PIRConfig) -> Tuple[Tuple[int, ...], type]:
         """(shape tail, dtype) of one reconstructed record — XOR schemes
@@ -237,6 +270,17 @@ class PIRProtocol:
                plan: ExecutionPlan) -> jax.Array:
         """Cross-shard reduction of partial answers over mesh axis ``axis``."""
         raise NotImplementedError
+
+    # -- hint lifecycle (hint protocols only) ---------------------------
+    def hint_builder(self, cfg: PIRConfig):
+        """Device fn: words view ``[N, W]`` -> hint array (full rebuild)."""
+        raise NotImplementedError(f"{self.name} has no hint")
+
+    def hint_delta(self, cfg: PIRConfig):
+        """Device fn: (hint, rows, old_words, new_words) -> updated hint,
+        exact (byte-for-byte equal to a full rebuild). None if the
+        protocol's hint only supports full recompute."""
+        return None
 
     # -- batching (shared defaults) -------------------------------------
     def pad(self, keys, n_total: int):
@@ -578,6 +622,145 @@ def _component_bits_batch(keys: dpf.DPFKey, start_block, log_range: int
     return jax.vmap(lambda k: _component_bits(k, start_block, log_range))(keys)
 
 
+# ---------------------------------------------------------------------------
+# lwe-simple-1: single-server SimplePIR-style LWE PIR (beyond-paper)
+# ---------------------------------------------------------------------------
+
+class LweSimple1(PIRProtocol):
+    """Single-server LWE PIR: encrypted one-hot query, int32 GEMM answer.
+
+    The first protocol with no non-collusion assumption (DESIGN.md §10):
+    privacy rests on LWE hardness, not on servers never comparing notes.
+    The price is a preprocessed *hint* ``H = A^T.DB`` the client needs at
+    reconstruction time — built by the database plane per epoch
+    (``ShardedDatabase.register_hint``) and delta-updated on ``publish()``.
+
+    Server hot loop: ``ct[Q, N] x db_bytes32[N, L] -> int32 [Q, L]`` —
+    structurally the additive GEMM with int32 operands, so it slots into
+    the same engine tile space (``lwe-gemm-*`` descriptors). int32
+    accumulation wraps mod 2^32 = mod q natively: the GEMM *is* the Z_q
+    contraction, and cross-shard psum (also wrapping) is the Z_q sum.
+
+    Correctness is parameterized, not assumed: ``core/lwe.py`` selects
+    (n, sigma) from a validated table and ``LWEParams.validate`` raises
+    when the noise bound crosses q/(2p) — see the noise-budget property
+    tests. Parameters are demonstration-grade, not a security review.
+    """
+
+    name = "lwe-simple-1"
+    share_kind = "lwe"
+    db_view = "bytes32"
+    needs_hint = True
+
+    def _params(self, cfg: PIRConfig):
+        from repro.core import lwe
+        return lwe.params_for(cfg.n_items)
+
+    # -- client side ----------------------------------------------------
+    def n_parties(self, cfg: PIRConfig) -> int:
+        return 1
+
+    def query_gen_full(self, rng, index, cfg):
+        from repro.core import lwe
+        ct, state = lwe.encrypt(rng, index, cfg.n_items, self._params(cfg))
+        return (ct,), state
+
+    def query_gen(self, rng, index, cfg):
+        # keys without the secret: enough for serve-side tooling (tuner
+        # measurement inputs); reconstruction requires query_gen_full.
+        return self.query_gen_full(rng, index, cfg)[0]
+
+    def reconstruct(self, answers):
+        raise NotImplementedError(
+            "lwe-simple-1 reconstruction needs per-query client state and "
+            "the epoch hint: use reconstruct_with(answers, states, cfg=..., "
+            "hint=...) — sessions route this via SingleServerPIR")
+
+    def reconstruct_with(self, answers, states, *, cfg=None, hint=None):
+        from repro.core import lwe
+        if cfg is None or hint is None or any(s is None for s in states):
+            raise ValueError("lwe-simple-1 reconstruct_with needs cfg=, "
+                             "hint= and one client state per query")
+        params = self._params(cfg)
+        secrets = np.stack([s.s for s in states])
+        hint_u64 = np.asarray(hint).view(np.uint32).astype(np.uint64)
+        records, err = lwe.decode(np.asarray(answers[0]), secrets, hint_u64,
+                                  params)
+        # correctness-bound assertion. The recovered residual lands in
+        # [-Delta/2, Delta/2) by construction, so comparing it to the
+        # budget q/(2p) = Delta/2 would be vacuous; the checkable bound
+        # is the analytic tail validate() enforces (well under Delta/2):
+        # honest noise sits ~TAIL sigmas inside it, while a wrong hint /
+        # mismatched epoch makes the residual near-uniform in the Delta
+        # window and trips it with overwhelming probability.
+        max_err = int(np.abs(err).max()) if err.size else 0
+        bound = params.noise_bound(cfg.n_items)
+        if max_err >= bound:
+            raise RuntimeError(
+                f"LWE noise overflow: recovered |e^T.D| = {max_err} >= "
+                f"tail bound {bound:.4g} (budget q/(2p) = "
+                f"{params.noise_budget}); the answers do not match this "
+                f"hint/epoch — reconstruction is not trustworthy")
+        return jnp.asarray(records)
+
+    def record_struct(self, cfg: PIRConfig):
+        return (cfg.item_bytes,), np.uint8
+
+    # -- server side ----------------------------------------------------
+    def key_specs(self, cfg, n_queries, *, party=0):
+        from repro.core.lwe import LWECiphertext
+        return LWECiphertext(
+            ct=jax.ShapeDtypeStruct((n_queries, cfg.n_items), np.int32),
+            log_n=cfg.log_n, n=self._params(cfg).n)
+
+    def answer_local(self, db_local, keys_local, start_block, log_local,
+                     plan):
+        # db_local is the int32 byte view [rows_local, item_bytes]; slice
+        # this shard's ciphertext columns (start_block may be traced).
+        rows_local = db_local.shape[0]
+        ct = keys_local.ct
+        start = start_block * rows_local
+        ct_local = jax.lax.dynamic_slice_in_dim(ct, start, rows_local, axis=1)
+        if plan.scan == "pallas":
+            from repro.kernels import ops
+            return ops.lwe_gemm(ct_local, db_local, tile_q=plan.tile_q,
+                                tile_r=plan.tile_r, tile_l=plan.tile_l)
+        return jax.lax.dot_general(ct_local, db_local,
+                                   (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.int32)
+
+    def reduce(self, partial_res, axis, n_shards, plan):
+        return jax.lax.psum(partial_res, axis)   # int32 psum wraps mod q
+
+    # -- hint lifecycle -------------------------------------------------
+    def hint_builder(self, cfg: PIRConfig):
+        from repro.core import lwe
+        return lwe.hint_build_fn(self._params(cfg), cfg.n_items)
+
+    def hint_delta(self, cfg: PIRConfig):
+        from repro.core import lwe
+        return lwe.hint_delta_fn(self._params(cfg), cfg.n_items)
+
+    # -- batching: LWECiphertext is not a DPFKey ------------------------
+    def pad(self, keys, n_total: int):
+        q = self.n_queries(keys)
+        if n_total < q:
+            raise ValueError(f"cannot pad {q} queries down to {n_total}")
+        if n_total == q:
+            return keys
+        pad = n_total - q
+
+        def pad_leaf(leaf):
+            reps = (pad,) + (1,) * (leaf.ndim - 1)
+            return jnp.concatenate([leaf, jnp.tile(leaf[-1:], reps)], axis=0)
+
+        return jax.tree_util.tree_map(pad_leaf, keys)
+
+    def n_queries(self, keys) -> int:
+        return int(keys.ct.shape[0])
+
+
 register(XorDpf2())
 register(AdditiveDpf2())
 register(XorDpfK())
+register(LweSimple1())

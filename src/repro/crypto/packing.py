@@ -53,6 +53,17 @@ def words_to_bytes_i8(w: jnp.ndarray) -> jnp.ndarray:
     return words_to_bytes(w).astype(jnp.int8)
 
 
+def words_to_bytes_i32(w: jnp.ndarray) -> jnp.ndarray:
+    """``[..., k] uint32 -> [..., 4k] int32`` byte view (little-endian).
+
+    The LWE-facing form: byte *values* 0..255 widened (not reinterpreted)
+    to int32, because the mod-2^32 GEMM needs the true byte magnitudes —
+    the int8 view's negative reinterpretation of bytes >= 128 would offset
+    the Z_q contraction by a non-multiple of q.
+    """
+    return words_to_bytes(w).astype(jnp.int32)
+
+
 def np_bytes_to_words(b: np.ndarray) -> np.ndarray:
     """Host-side (numpy) variant for DB construction."""
     assert b.shape[-1] % 4 == 0

@@ -14,11 +14,20 @@ Placement (DESIGN.md §8.2)
 
 Views (DESIGN.md §8.1)
     Protocols declare the view they contract against
-    (``PIRProtocol.db_view``): ``words`` (u32, XOR schemes) or ``bytes``
-    (int8, the additive GEMM). The byte view is derived **on device** from
-    the resident word view (one elementwise pack, lazily on first use) and
-    thereafter maintained *incrementally* by the update path — never
-    re-packed from scratch, never round-tripped through the host.
+    (``PIRProtocol.db_view``): ``words`` (u32, XOR schemes), ``bytes``
+    (int8, the additive GEMM) or ``bytes32`` (int32 bytes, the LWE GEMM).
+    Derived views are packed **on device** from the resident word view
+    (one elementwise pack, lazily on first use) and thereafter maintained
+    *incrementally* by the update path — never re-packed from scratch,
+    never round-tripped through the host.
+
+Hints (DESIGN.md §10)
+    Single-server protocols register per-epoch *hints* (server-side
+    preprocessing, e.g. the LWE ``H = A^T.DB``): materialized lazily per
+    epoch via ``hint(name)``, delta-updated exactly on ``publish()`` when
+    the protocol registered a delta fn (dropped and lazily rebuilt
+    otherwise). Retired-epoch hints stay fetchable for one epoch of
+    hysteresis, matching the view double buffer.
 
 Epoched updates (DESIGN.md §8.3)
     ``stage(rows, values)`` accumulates a public delta log on the host;
@@ -61,6 +70,23 @@ class TransferStats:
     n_full_placements: int = 0     # chunked host→device placements
     n_view_packs: int = 0          # on-device full word→byte derivations
     n_publishes: int = 0
+    n_hint_builds: int = 0         # full hint recomputes (lazy, per epoch)
+    n_hint_deltas: int = 0         # O(rows) incremental hint updates
+
+
+@dataclass(frozen=True)
+class _HintSpec:
+    """One registered hint: full rebuild + optional exact delta update.
+
+    build  words view [N, W] -> hint array (device)
+    delta  (hint, rows, old_words, new_words) -> updated hint, or None —
+           rows are the deduplicated UNPADDED published indices, old/new
+           the [R, W] word rows before/after the scatter. Must be exact
+           (byte-for-byte equal to a rebuild); hints without a delta are
+           dropped on publish and lazily rebuilt.
+    """
+    build: object
+    delta: object = None
 
 
 @dataclass
@@ -73,9 +99,11 @@ class PublishedDelta:
 
 @dataclass
 class _Epoch:
-    """One immutable DB version: epoch id + its device-resident views."""
+    """One immutable DB version: epoch id + its device-resident views
+    and lazily materialized per-epoch hints (single-server protocols)."""
     epoch: int
     views: Dict[str, jax.Array] = field(default_factory=dict)
+    hints: Dict[str, jax.Array] = field(default_factory=dict)
 
 
 class ShardedDatabase:
@@ -105,8 +133,8 @@ class ShardedDatabase:
         self._staged_vals: List[np.ndarray] = []
         self.published: List[PublishedDelta] = []
         self._scatter_cache: dict = {}
-        self._pack_bytes = jax.jit(self.spec.words_to_bytes_device,
-                                   out_shardings=self.sharding("bytes"))
+        self._pack_cache: dict = {}
+        self._hint_specs: Dict[str, _HintSpec] = {}
         host = self.spec.validate_words(db_words)
         self._current = _Epoch(epoch=0,
                                views={"words": self._place(host)})
@@ -150,17 +178,21 @@ class ShardedDatabase:
         anything older has been released.
         """
         with self._lock:
-            holder = self._current
-            if epoch is not None and epoch != self._current.epoch:
-                if self._retired is None or epoch != self._retired.epoch:
-                    raise KeyError(
-                        f"epoch {epoch} is not resident (current="
-                        f"{self._current.epoch}, retired="
-                        f"{None if self._retired is None else self._retired.epoch})")
-                holder = self._retired
+            holder = self._holder(epoch)
             if name not in holder.views:
                 holder.views[name] = self._derive(name, holder.views["words"])
             return holder.views[name]
+
+    def _holder(self, epoch: Optional[int]) -> _Epoch:
+        """The resident _Epoch an epoch id names (lock held by caller)."""
+        if epoch is None or epoch == self._current.epoch:
+            return self._current
+        if self._retired is None or epoch != self._retired.epoch:
+            raise KeyError(
+                f"epoch {epoch} is not resident (current="
+                f"{self._current.epoch}, retired="
+                f"{None if self._retired is None else self._retired.epoch})")
+        return self._retired
 
     def snapshot(self, names: Tuple[str, ...] = ("words",)
                  ) -> Tuple[int, Dict[str, jax.Array]]:
@@ -181,7 +213,46 @@ class ShardedDatabase:
         # on-device pack; counted so tests can assert it happens at most
         # once per epoch lineage (updates maintain it incrementally)
         self.stats.n_view_packs += 1
-        return self._pack_bytes(words)
+        if name not in self._pack_cache:
+            spec = self.spec
+            self._pack_cache[name] = jax.jit(
+                lambda w, name=name: spec.words_to_view_device(name, w),
+                out_shardings=self.sharding(name))
+        return self._pack_cache[name](words)
+
+    # ------------------------------------------------------------------
+    # hints (single-server preprocessing, DESIGN.md §10)
+    # ------------------------------------------------------------------
+
+    def register_hint(self, name: str, build, delta=None) -> None:
+        """Register a per-epoch hint: ``build(words_view) -> hint`` plus an
+        optional exact ``delta(hint, rows, old_words, new_words)`` update.
+
+        Hints are epoch-scoped like views: materialized lazily on first
+        :meth:`hint` call, delta-updated (or dropped for lazy rebuild when
+        no delta is registered) on :meth:`publish`. Re-registering a name
+        replaces the spec but keeps already-materialized epoch hints.
+        """
+        with self._lock:
+            self._hint_specs[name] = _HintSpec(build=build, delta=delta)
+
+    def hint(self, name: str, *, epoch: Optional[int] = None) -> jax.Array:
+        """The device-resident hint for one epoch (current or retired).
+
+        Clients cache the returned array keyed by the epoch their answers
+        were tagged with; a publish bumps the epoch, so stale caches miss
+        and re-fetch — that is the hint-invalidation contract.
+        """
+        with self._lock:
+            if name not in self._hint_specs:
+                raise KeyError(f"unknown hint {name!r}; registered: "
+                               f"{sorted(self._hint_specs)}")
+            holder = self._holder(epoch)
+            if name not in holder.hints:
+                holder.hints[name] = \
+                    self._hint_specs[name].build(holder.views["words"])
+                self.stats.n_hint_builds += 1
+            return holder.hints[name]
 
     # ------------------------------------------------------------------
     # epoched online updates
@@ -235,6 +306,15 @@ class ShardedDatabase:
             _, first_of_rev = np.unique(rows[::-1], return_index=True)
             keep = np.sort(len(rows) - 1 - first_of_rev)
             rows, vals = rows[keep], vals[keep]
+            # hint deltas need the deduplicated UNPADDED delta (a padded
+            # duplicate would subtract its old row twice) and the old word
+            # rows gathered from the pre-publish view, before the scatter
+            delta_hints = {n: h for n, h in self._current.hints.items()
+                           if self._hint_specs[n].delta is not None}
+            if delta_hints:
+                rows_u, vals_u = rows, vals       # pre-padding references
+                old_words = self._current.views["words"][
+                    jnp.asarray(rows_u.astype(np.int32))]
             # pad the delta to a power of two (replicating one entry:
             # identical index+value pairs scatter deterministically) so
             # ragged update sizes reuse a small set of compiled scatters
@@ -252,9 +332,16 @@ class ShardedDatabase:
                 name: self._scatter(name, len(rows))(arr, idx_dev, vals_dev)
                 for name, arr in self._current.views.items()
             }
+            # materialized hints: exact O(rows) delta where registered;
+            # delta-less hints are dropped and lazily rebuilt on next use
+            new_hints = {}
+            for name, harr in delta_hints.items():
+                new_hints[name] = self._hint_specs[name].delta(
+                    harr, rows_u, old_words, jnp.asarray(vals_u))
+                self.stats.n_hint_deltas += 1
             self._retired = self._current
             self._current = _Epoch(epoch=self._retired.epoch + 1,
-                                   views=new_views)
+                                   views=new_views, hints=new_hints)
             self.stats.n_publishes += 1
             self.published.append(PublishedDelta(
                 epoch=self._current.epoch, rows=rows[: len(keep)],
@@ -270,11 +357,8 @@ class ShardedDatabase:
         key = (view, r)
         if key not in self._scatter_cache:
             sharding = self.sharding(view)
-            if view == "words":
-                fn = lambda arr, idx, vals: arr.at[idx].set(vals)
-            else:
-                spec = self.spec
-                fn = lambda arr, idx, vals: arr.at[idx].set(
-                    spec.words_to_bytes_device(vals))
+            spec = self.spec
+            fn = lambda arr, idx, vals, view=view: arr.at[idx].set(
+                spec.words_to_view_device(view, vals))
             self._scatter_cache[key] = jax.jit(fn, out_shardings=sharding)
         return self._scatter_cache[key]

@@ -23,12 +23,16 @@ import numpy as np
 
 from repro.config import PIRConfig
 from repro.crypto.packing import (np_bytes_to_words, np_words_to_bytes,
-                                  words_to_bytes_i8)
+                                  words_to_bytes_i8, words_to_bytes_i32)
 
 #: registered database views: name -> (dtype, bytes-per-record-column)
 VIEWS = {
     "words": np.dtype(np.uint32),   # [N, item_bytes // 4] — XOR schemes
     "bytes": np.dtype(np.int8),     # [N, item_bytes]      — additive GEMM
+    "bytes32": np.dtype(np.int32),  # [N, item_bytes]      — LWE GEMM
+    # bytes32 holds the same byte values 0..255 widened to int32: the LWE
+    # contraction is mod-2^32 arithmetic, and the int8 view's reinterpreted
+    # negatives (byte >= 128 -> byte - 256) would shift it by 256·k ≠ 0 mod q.
 }
 
 
@@ -119,6 +123,27 @@ class DatabaseSpec:
         """[..., W] u32 -> [..., 4W] i8 as a traced jax op (the device-side
         view derivation — never a host round trip)."""
         return words_to_bytes_i8(words)
+
+    def words_to_view_device(self, view: str, words: jax.Array) -> jax.Array:
+        """Device-side derivation of any registered view from word rows."""
+        if view == "words":
+            return words
+        if view == "bytes":
+            return words_to_bytes_i8(words)
+        if view == "bytes32":
+            return words_to_bytes_i32(words)
+        raise KeyError(f"unknown db view {view!r}; known: {sorted(VIEWS)}")
+
+    def pack_host(self, words: np.ndarray, view: str) -> np.ndarray:
+        """Host-side packing of word rows into any registered view
+        (tuner measurement inputs, test oracles)."""
+        if view == "words":
+            return np.asarray(words, np.uint32)
+        if view == "bytes":
+            return self.words_to_bytes_host(words).view(np.int8)
+        if view == "bytes32":
+            return self.words_to_bytes_host(words).astype(np.int32)
+        raise KeyError(f"unknown db view {view!r}; known: {sorted(VIEWS)}")
 
     def coerce_rows_to_words(self, values: np.ndarray) -> np.ndarray:
         """Normalize update payloads to [R, W] u32 rows.

@@ -61,7 +61,7 @@ class KernelDescriptor:
     """One answer-kernel body + its tunable space and validity model."""
 
     name: str
-    share_kind: str                       # xor | additive | prg
+    share_kind: str                       # xor | additive | lwe | prg
     #: ExecutionPlan base fields (serve kernels); empty for standalone
     expand: str = ""
     scan: str = ""
@@ -213,6 +213,21 @@ def _gemm_bytes(shape: ProblemShape, p: Dict[str, int]) -> int:
     return 2 * q * r + r * l + 4 * q * l
 
 
+def _lwe_gemm_footprint(shape: ProblemShape, p: Dict[str, int]) -> int:
+    tq = p.get("tile_q", legal_tile(shape.bucket, 8))
+    tr = p.get("tile_r", legal_tile(shape.rows, GEMM_TILE_R_DEFAULT))
+    tl = p.get("tile_l", legal_tile(shape.item_bytes, 128))
+    # int32 everywhere: streamed ct/db blocks ×2 + resident output block.
+    # 4× the int8 GEMM's streams — the same tile ladder prunes earlier.
+    return 4 * (2 * (tq * tr + tr * tl) + tq * tl)
+
+
+def _lwe_gemm_bytes(shape: ProblemShape, p: Dict[str, int]) -> int:
+    q, r, l = shape.bucket, shape.rows, shape.item_bytes
+    # ciphertexts read once (int32) + one DB pass (int32 view) + int32 out
+    return 4 * (q * r + r * l + q * l)
+
+
 def _ggm_space(shape: ProblemShape) -> Dict[str, Tuple[int, ...]]:
     n = shape.rows                         # leaves at the widest level
     return {"tile": tuple(sorted({legal_tile(n, t) for t in _GGM_TILES}))}
@@ -257,6 +272,19 @@ GEMM_PALLAS = register_kernel(KernelDescriptor(
     bytes_fn=_gemm_bytes,
 ))
 
+LWE_GEMM_JNP = register_kernel(KernelDescriptor(
+    name="lwe-gemm-jnp", share_kind="lwe",
+    expand="materialize", scan="jnp",
+    bytes_fn=_lwe_gemm_bytes,
+))
+
+LWE_GEMM_PALLAS = register_kernel(KernelDescriptor(
+    name="lwe-gemm-pallas", share_kind="lwe",
+    expand="materialize", scan="pallas",
+    space_fn=_gemm_space, footprint_fn=_lwe_gemm_footprint,
+    bytes_fn=_lwe_gemm_bytes,
+))
+
 GGM_EXPAND = register_kernel(KernelDescriptor(
     name="ggm-expand", share_kind="prg", serve=False,
     space_fn=_ggm_space, footprint_fn=_ggm_footprint,
@@ -293,14 +321,14 @@ def plans_from_kernel(desc: KernelDescriptor, shape: ProblemShape, *,
 def descriptor_for_plan(plan, share_kind: str) -> KernelDescriptor:
     """The registered descriptor a plan executes on (for byte models).
 
-    Matching mirrors ``answer_local`` dispatch: additive protocols ignore
-    ``expand`` (the GEMM always materializes its share matrix), so any
-    additive plan — including a legacy ``path="fused"`` one — maps to the
+    Matching mirrors ``answer_local`` dispatch: additive and LWE protocols
+    ignore ``expand`` (the GEMM always materializes its operand matrix), so
+    any such plan — including a legacy ``path="fused"`` one — maps to the
     GEMM descriptor of its ``scan``; the fused XOR body ignores ``scan``
     (its inner fold is always the jnp dpxor).
     """
     for d in serve_kernels(share_kind):
-        if share_kind == "additive":
+        if share_kind in ("additive", "lwe"):
             if d.scan == plan.scan:
                 return d
         elif d.expand == plan.expand and (plan.expand == "fused"

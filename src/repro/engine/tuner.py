@@ -74,7 +74,8 @@ def heuristic_plan(cfg, n_queries: int, *, backend: Optional[str] = None,
         backend = probe_backend()
     scan = "pallas" if backend == "tpu" else "jnp"
     proto = protocol_mod.get(cfg.protocol)
-    if proto.share_kind == "additive":
+    if proto.share_kind in ("additive", "lwe"):
+        # both contract via a materialized GEMM (int8 / int32); same rule
         return protocol_mod.ExecutionPlan(
             expand="materialize", scan=scan, chunk_log=chunk_log,
             tile_r=GEMM_TILE_R_DEFAULT)
@@ -213,11 +214,7 @@ def _measurement_inputs(cfg, bucket: int, proto, seed: int):
     rng = np.random.default_rng(seed)
     spec = DatabaseSpec.from_config(cfg)
     db_words = pir.make_database(rng, cfg.n_items, cfg.item_bytes)
-    if proto.db_view == "bytes":
-        db = jax.numpy.asarray(
-            spec.words_to_bytes_host(db_words).view(np.int8))
-    else:
-        db = jax.numpy.asarray(db_words)
+    db = jax.numpy.asarray(spec.pack_host(db_words, proto.db_view))
     idx = rng.integers(0, cfg.n_items, size=bucket).tolist()
     keys = pir.batch_queries(rng, idx, cfg)[0]
     return db, keys

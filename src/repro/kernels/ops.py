@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from repro.engine.backend import default_interpret, legal_tile, on_tpu
 from repro.kernels.dpxor import dpxor_t
 from repro.kernels.ggm_expand import ggm_expand_level
-from repro.kernels.pir_matmul import pir_matmul
+from repro.kernels.pir_matmul import lwe_matmul, pir_matmul
 
 U32 = jnp.uint32
 
@@ -35,7 +35,7 @@ def _on_tpu() -> bool:
 # ``default_interpret`` is re-exported from engine.backend unchanged: real
 # Mosaic only on an (effective) TPU backend.
 __all__ = ["default_interpret", "dpxor", "dpxor_transposed", "ggm_expand",
-           "ggm_eval_leaves", "pir_gemm"]
+           "ggm_eval_leaves", "lwe_gemm", "pir_gemm"]
 
 
 # ---------------------------------------------------------------------------
@@ -140,6 +140,27 @@ def pir_gemm(shares: jax.Array, db_bytes: jax.Array, *, tile_q: int = 8,
     l = db_bytes.shape[1]
     return pir_matmul(
         shares, db_bytes,
+        tile_q=legal_tile(q, tile_q), tile_r=legal_tile(r, tile_r),
+        tile_l=legal_tile(l, tile_l),
+        interpret=interpret,
+    )
+
+
+def lwe_gemm(ct: jax.Array, db_bytes32: jax.Array, *, tile_q: int = 8,
+             tile_r: int = 1024, tile_l: int = 128,
+             interpret: bool | None = None) -> jax.Array:
+    """Single-server LWE contraction: [Q, R] i32 × [R, L] i32 -> [Q, L] i32.
+
+    int32 twin of :func:`pir_gemm` (same blocked program, 4-byte streams);
+    the accumulate wraps mod 2^32 = mod q, so this is the exact Z_q GEMM
+    of the lwe-simple-1 answer step.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    q, r = ct.shape
+    l = db_bytes32.shape[1]
+    return lwe_matmul(
+        ct, db_bytes32,
         tile_q=legal_tile(q, tile_q), tile_r=legal_tile(r, tile_r),
         tile_l=legal_tile(l, tile_l),
         interpret=interpret,

@@ -80,3 +80,46 @@ def pir_matmul(
         out_shape=jax.ShapeDtypeStruct((q, l), I32),
         interpret=interpret,
     )(shares.astype(jnp.int8), db_bytes.astype(jnp.int8))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_q", "tile_r", "tile_l", "interpret")
+)
+def lwe_matmul(
+    ct: jax.Array,
+    db_bytes32: jax.Array,
+    *,
+    tile_q: int = 8,
+    tile_r: int = 1024,
+    tile_l: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """``ct[Q, R] i32 × db[R, L] i32 -> [Q, L] i32`` LWE PIR answers.
+
+    Same blocked three-loop program as :func:`pir_matmul` — identical grid
+    and BlockSpecs, int32 operands instead of int8. Correctness over Z_q
+    with q = 2^32: int32 accumulation wraps mod 2^32, so the GEMM computes
+    the Z_q contraction exactly (DESIGN.md §10). Streams are 4× wider than
+    the int8 path, which is why the engine registers a separate descriptor
+    with its own VMEM footprint model.
+    """
+    q, r = ct.shape
+    r2, l = db_bytes32.shape
+    if r != r2:
+        raise ValueError(f"reduction mismatch {ct.shape} x {db_bytes32.shape}")
+    tile_q, tile_r, tile_l = min(tile_q, q), min(tile_r, r), min(tile_l, l)
+    for name, dim, t in (("Q", q, tile_q), ("R", r, tile_r), ("L", l, tile_l)):
+        if dim % t:
+            raise ValueError(f"{name}={dim} not divisible by tile {t}")
+    grid = (q // tile_q, l // tile_l, r // tile_r)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, tile_r), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tile_r, tile_l), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, tile_l), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q, l), I32),
+        interpret=interpret,
+    )(ct.astype(I32), db_bytes32.astype(I32))

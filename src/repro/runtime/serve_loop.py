@@ -543,6 +543,11 @@ class MultiServerPIR:
     ``epoch`` its answer was computed at.
     """
 
+    #: hint protocols (``PIRProtocol.needs_hint``) thread per-query client
+    #: state and an epoch hint through the scheduler; only subclasses that
+    #: implement that plumbing (SingleServerPIR) may serve them.
+    _supports_hint_protocols = False
+
     def __init__(self, db_words, cfg: PIRConfig, mesh,
                  *, path: Optional[str] = "fused", n_queries: int = 4,
                  buckets: Optional[Sequence[int]] = None,
@@ -553,6 +558,11 @@ class MultiServerPIR:
         self.cfg = cfg
         self.protocol = (protocol if protocol is not None
                          else protocol_mod.for_config(cfg))
+        if self.protocol.needs_hint and not self._supports_hint_protocols:
+            raise ValueError(
+                f"protocol {self.protocol.name!r} needs hint plumbing "
+                f"(per-query client state + epoch hints) — use "
+                f"SingleServerPIR, not {type(self).__name__}")
         self.n_parties = self.protocol.n_parties(cfg)
         # one shared database plane object for all k parties (a host
         # array is wrapped; an existing ShardedDatabase passes through)
@@ -676,6 +686,114 @@ class MultiServerPIR:
             self.scheduler.pump()
         return np.stack([f.result(timeout=self._query_timeout_s)
                          for f in futs])
+
+
+class SingleServerPIR(MultiServerPIR):
+    """Single-server deployment for hint protocols (``lwe-simple-1``).
+
+    The no-collusion-assumption scenario (DESIGN.md §10): one server, and
+    privacy rests on LWE hardness instead of parties never comparing
+    notes. Reuses the whole multi-server machinery — ``ShardedDatabase``,
+    ``PIRServer``'s bucketed compiled steps, the ``QueryScheduler`` — with
+    the two deltas a hint protocol needs:
+
+      * **client state**: :meth:`submit` generates ``(keys, state)`` via
+        ``query_gen_full``; the per-query secret rides through the
+        scheduler next to the keys (never serialized, never staged onto
+        devices) and meets the answers again at finalize;
+      * **client-side hint cache**: reconstruction needs the epoch's hint
+        ``H = A^T.DB``. The facade plays the client here: it caches the
+        hint keyed by the epoch each batch's answers were tagged with and
+        re-fetches on a miss — a ``publish()`` bumps the epoch, so stale
+        caches are invalidated exactly when the data changes
+        (``hint_fetches`` counts the round trips; the server side
+        maintains the hint itself incrementally via the registered delta).
+
+    ``path`` defaults to ``None``: the plan is resolved through the engine
+    plane (plan-cache hit -> tuned LWE GEMM tiles, miss -> heuristic).
+    """
+
+    _supports_hint_protocols = True
+
+    def __init__(self, db_words, cfg: PIRConfig, mesh,
+                 *args, path: Optional[str] = None,
+                 protocol: Optional[PIRProtocol] = None, **kwargs):
+        proto = (protocol if protocol is not None
+                 else protocol_mod.for_config(cfg))
+        k = proto.n_parties(cfg)
+        if k != 1:
+            raise ValueError(
+                f"SingleServerPIR requires a 1-party protocol; "
+                f"{proto.name!r} has {k} parties — use MultiServerPIR")
+        # client-side hint cache: set up BEFORE super().__init__ builds
+        # the scheduler (whose finalize closure reads it)
+        self._hint_lock = threading.Lock()
+        self._hint_cache: Dict[int, np.ndarray] = {}
+        self.hint_fetches = 0
+        super().__init__(db_words, cfg, mesh, *args, path=path,
+                         protocol=proto, **kwargs)
+
+    def _client_hint(self, epoch: int) -> np.ndarray:
+        """The hint for one epoch, through the client-side cache."""
+        with self._hint_lock:
+            if epoch not in self._hint_cache:
+                self.hint_fetches += 1
+                self._hint_cache[epoch] = np.asarray(
+                    self.db.hint(self.protocol.name, epoch=epoch))
+                # two epochs of hysteresis, mirroring the server's
+                # retired-view double buffer
+                for e in sorted(self._hint_cache)[:-2]:
+                    del self._hint_cache[e]
+            return self._hint_cache[epoch]
+
+    def _make_scheduler(self, max_wait_s: float, n_clusters: int
+                        ) -> QueryScheduler:
+        server = self.servers[0]
+        proto = self.protocol
+        cfg = self.cfg
+        db = self.db
+        # server-side hint lifecycle: built lazily per epoch, delta-updated
+        # on publish (db/sharded.py)
+        db.register_hint(proto.name, proto.hint_builder(cfg),
+                         proto.hint_delta(cfg))
+
+        def collate(items):
+            # items: ((keys,), state) per query — stack party-0 keys,
+            # carry the client states alongside (host-only, never staged)
+            keys = dpf.stack_keys([it[0][0] for it in items])
+            return keys, [it[1] for it in items]
+
+        def stage(payload):
+            keys, states = payload
+            return server.stage_keys(keys), states
+
+        def dispatch(staged):
+            keys, states = staged
+            epoch, views = db.snapshot((proto.db_view,))
+            ans = server.bucketed.answer(views[proto.db_view], keys)
+            return ans, epoch, states
+
+        def finalize(raw, n):
+            ans, epoch, states = raw
+            hint = self._client_hint(epoch)
+            rec = np.asarray(proto.reconstruct_with(
+                [np.asarray(ans[:n])], states[:n], cfg=cfg, hint=hint))
+            return list(rec)
+
+        return QueryScheduler(
+            collate=collate, stage=stage, dispatch=dispatch,
+            finalize=finalize, buckets=server.buckets,
+            n_clusters=n_clusters, max_wait_s=max_wait_s,
+            epoch_of=lambda raw: raw[1])
+
+    def submit(self, index: int) -> AnswerFuture:
+        """Private retrieval of ``db[index]``; resolves to one record
+        ([item_bytes] u8). The per-query LWE secret stays client-side:
+        only the ciphertext enters the scheduler's device path."""
+        with self._lock:     # client-side keygen shares one rng
+            keys, state = self.protocol.query_gen_full(self.rng, index,
+                                                       self.cfg)
+        return self.scheduler.submit((keys, state))
 
 
 class TwoServerPIR(MultiServerPIR):

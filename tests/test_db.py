@@ -334,6 +334,121 @@ def test_update_then_query_parity(mesh, proto_name, n_servers):
 
 
 # ---------------------------------------------------------------------------
+# hint lifecycle (single-server preprocessing, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def _lwe_db(mesh):
+    cfg = PIRConfig(n_items=N, protocol="lwe-simple-1", n_servers=1)
+    proto = for_config(cfg)
+    db = ShardedDatabase(DB, cfg, mesh)
+    db.register_hint(proto.name, proto.hint_builder(cfg),
+                     proto.hint_delta(cfg))
+    return db, proto, cfg
+
+
+def test_hint_lazy_build_cached_per_epoch(mesh):
+    from repro.core import lwe
+    db, proto, cfg = _lwe_db(mesh)
+    with pytest.raises(KeyError, match="unknown hint"):
+        db.hint("never-registered")
+    assert db.stats.n_hint_builds == 0       # lazy: nothing built yet
+    h = np.asarray(db.hint(proto.name))
+    assert db.stats.n_hint_builds == 1
+    db.hint(proto.name)
+    assert db.stats.n_hint_builds == 1       # cached, not re-derived
+    # built hint matches the numpy oracle on the words view
+    params = lwe.params_for(N)
+    np.testing.assert_array_equal(
+        h.view(np.uint32),
+        lwe.hint_np(params, pir.db_as_bytes(DB)).astype(np.uint32))
+
+
+def test_hint_delta_update_matches_full_recompute(mesh):
+    """publish() maintains a materialized hint via the registered O(rows)
+    delta — byte-for-byte equal to a full rebuild on the new words, and
+    exact across dedup (same row staged twice: last write wins once)."""
+    db, proto, cfg = _lwe_db(mesh)
+    h0 = np.asarray(db.hint(proto.name))
+    rng = np.random.default_rng(41)
+    rows, vals = _rand_rows(rng, 4)
+    db.stage(rows, vals)
+    # restage row[0]: the delta must see ONE transition old -> final value
+    v_final = rng.integers(0, 1 << 32, size=(1, 8), dtype=np.uint32)
+    db.stage(rows[:1], v_final)
+    db.publish()
+    assert db.stats.n_hint_deltas == 1
+    assert db.stats.n_hint_builds == 1       # never a full rebuild
+    expect = DB.copy()
+    expect[rows] = vals
+    expect[rows[0]] = v_final
+    want = np.asarray(proto.hint_builder(cfg)(jnp.asarray(expect)))
+    got = np.asarray(db.hint(proto.name))
+    np.testing.assert_array_equal(got, want)
+    assert not np.array_equal(got, h0)       # the hint genuinely moved
+    # and the delta-updated hint keeps delta-updating on later epochs
+    rows2, vals2 = _rand_rows(np.random.default_rng(43), 2)
+    db.stage(rows2, vals2)
+    db.publish()
+    expect[rows2] = vals2
+    np.testing.assert_array_equal(
+        np.asarray(db.hint(proto.name)),
+        np.asarray(proto.hint_builder(cfg)(jnp.asarray(expect))))
+    assert db.stats.n_hint_deltas == 2
+    assert db.stats.n_hint_builds == 1
+
+
+def test_hint_without_delta_dropped_and_rebuilt(mesh):
+    """A hint registered with no delta fn is dropped at publish() and
+    lazily rebuilt against the new epoch's words on next access."""
+    db = _fresh_db(mesh, PIRConfig(n_items=N))
+    # wrapping u32 column sums (jax has no x64 here; mod 2^32 is exact)
+    db.register_hint("colsum", lambda words: jnp.sum(words, axis=0,
+                                                     dtype=jnp.uint32))
+    s0 = np.asarray(db.hint("colsum"))
+    np.testing.assert_array_equal(s0, DB.sum(axis=0, dtype=np.uint32))
+    assert db.stats.n_hint_builds == 1
+    rows, vals = _rand_rows(np.random.default_rng(47), 3)
+    db.stage(rows, vals)
+    db.publish()
+    assert db.stats.n_hint_deltas == 0       # no delta fn registered
+    expect = DB.copy()
+    expect[rows] = vals
+    np.testing.assert_array_equal(np.asarray(db.hint("colsum")),
+                                  expect.sum(axis=0, dtype=np.uint32))
+    assert db.stats.n_hint_builds == 2       # full lazy rebuild
+
+
+def test_stale_hint_cache_refreshes_on_epoch_bump(mesh):
+    """The client-contract half of invalidation: a session caching the
+    hint by epoch misses after publish() and fetches the fresh one; the
+    retired epoch's hint stays servable for in-flight batches."""
+    db, proto, cfg = _lwe_db(mesh)
+    cache = {}                               # a client's epoch-keyed cache
+
+    def client_hint(epoch):
+        if epoch not in cache:
+            cache[epoch] = np.asarray(db.hint(proto.name, epoch=epoch))
+        return cache[epoch]
+
+    h0 = client_hint(db.epoch)
+    assert client_hint(db.epoch) is h0       # same epoch: cache hit
+    rows, vals = _rand_rows(np.random.default_rng(53), 2)
+    db.stage(rows, vals)
+    db.publish()
+    h1 = client_hint(db.epoch)               # stale cache missed: refetch
+    assert not np.array_equal(h0, h1)
+    # in-flight answers tagged with the retired epoch still reconstruct:
+    # the old hint is pinned with the old views (double buffer)
+    np.testing.assert_array_equal(
+        np.asarray(db.hint(proto.name, epoch=0)), h0)
+    # two publishes back the epoch is released, like views
+    db.stage(rows[:1], vals[:1])
+    db.publish()
+    with pytest.raises(KeyError, match="not resident"):
+        db.hint(proto.name, epoch=0)
+
+
+# ---------------------------------------------------------------------------
 # config satellite: share_kind fallback is narrow
 # ---------------------------------------------------------------------------
 

@@ -178,6 +178,74 @@ def test_candidate_plans_cover_registered_kernels():
                 and 32 % p.tile_l == 0
 
 
+def test_lwe_gemm_candidates_cover_and_legalize():
+    """The LWE GEMM rides the engine like the additive GEMM: jnp + pallas
+    descriptors contribute candidates with legalized tiles."""
+    cfg = PIRConfig(n_items=N, protocol="lwe-simple-1", n_servers=1)
+    plans = engine.candidate_plans(cfg, 2)
+    names = {(p.expand, p.scan) for p in plans}
+    assert names == {("materialize", "jnp"), ("materialize", "pallas")}
+    for p in plans:
+        if p.scan == "pallas":
+            assert N % p.tile_r == 0 and 2 % p.tile_q == 0 \
+                and 32 % p.tile_l == 0
+
+
+def test_lwe_gemm_feasibility_prunes_before_int8_gemm():
+    """int32 operands: the LWE GEMM's VMEM footprint is 4x the int8
+    streams, so the same tile crosses the budget earlier. At the boundary
+    the int8 descriptor accepts a tile the LWE descriptor prunes."""
+    lwe_desc = engine.get_kernel("lwe-gemm-pallas")
+    int8_desc = engine.get_kernel("gemm-pallas")
+    shape = ProblemShape(bucket=16, rows=1 << 20, item_bytes=256)
+    # boundary tile: A = tr*(tq+tl) = 4.46 MB of streamed blocks ->
+    # int8 ~2A = 8.9 MB fits the 16 MiB budget, int32 ~8A = 35.7 MB not
+    tile = {"tile_q": 16, "tile_r": 16384, "tile_l": 256}
+    assert int8_desc.feasible(shape, tile)
+    assert not lwe_desc.feasible(shape, tile)
+    # the shipped ladder itself never goes empty for either kernel
+    assert lwe_desc.candidates(shape)
+    assert {tuple(sorted(c.items())) for c in lwe_desc.candidates(shape)} \
+        <= {tuple(sorted(c.items())) for c in int8_desc.candidates(shape)}
+
+
+def test_lwe_plan_resolution_through_engine(tmp_path, monkeypatch):
+    """ISSUE 6 acceptance: the LWE GEMM plan resolves through the engine —
+    heuristic on a cache miss, tuned provenance in plan_report on a hit."""
+    from repro.core.server import BucketedServeFns
+    from repro.engine.kernels import descriptor_for_plan
+    from repro.launch.mesh import make_local_mesh
+    cfg = PIRConfig(n_items=N, protocol="lwe-simple-1", n_servers=1)
+    path = str(tmp_path / "plans.json")
+    tuned = ExecutionPlan(expand="materialize", scan="jnp", tile_r=512,
+                          tile_q=8, tile_l=128, provenance="tuned")
+    c = PlanCache(path)
+    c.put(engine.backend(), cfg.protocol, spec_signature(cfg), 2, tuned)
+    c.save()
+    monkeypatch.setenv("REPRO_PLAN_CACHE", path)
+    engine.plan_cache(reload=True)
+    try:
+        # cache miss (bucket 4): lwe shares the additive GEMM heuristic
+        # (materialize + GEMM reduction tile) and maps onto the lwe kernels
+        miss = engine.resolve(cfg, 4, backend_name="cpu")
+        assert miss.provenance == "heuristic"
+        assert (miss.expand, miss.scan) == ("materialize", "jnp")
+        assert descriptor_for_plan(miss, "lwe").name == "lwe-gemm-jnp"
+        assert descriptor_for_plan(
+            ExecutionPlan(scan="pallas"), "lwe").name == "lwe-gemm-pallas"
+        # cache hit (bucket 2) -> tuned provenance through plan_report
+        b = BucketedServeFns(cfg, make_local_mesh(), buckets=(2,),
+                             path=None)
+        rep = b.plan_report()[2]
+        assert rep["provenance"] == "tuned"
+        assert b.plan_for_bucket(2).tile_r == 512
+        assert rep["predicted_step_bytes"] > 0
+        assert b.n_compiles == 0           # resolution never lowers
+    finally:
+        monkeypatch.delenv("REPRO_PLAN_CACHE")
+        engine.plan_cache(reload=True)
+
+
 def test_ggm_descriptor_registered_with_space():
     desc = engine.get_kernel("ggm-expand")
     assert not desc.serve                 # tuned standalone, not in plans
@@ -190,6 +258,7 @@ def test_ggm_descriptor_registered_with_space():
 @pytest.mark.slow          # ~30 s of XLA compile per candidate plan here
 @pytest.mark.parametrize("protocol,n_servers", [
     ("xor-dpf-2", 2), ("additive-dpf-2", 2), ("xor-dpf-k", 3),
+    ("lwe-simple-1", 1),
 ])
 def test_all_candidate_plans_answer_identically(protocol, n_servers):
     """Byte parity across the whole search space, per registered protocol:
@@ -204,12 +273,9 @@ def test_all_candidate_plans_answer_identically(protocol, n_servers):
     cfg = PIRConfig(n_items=N, protocol=protocol, n_servers=n_servers)
     proto = protocol_mod.get(cfg.protocol)
     db_words = pir.make_database(np.random.default_rng(5), N, 32)
-    if proto.db_view == "bytes":
-        from repro.db import DatabaseSpec
-        db = jnp.asarray(DatabaseSpec.from_config(cfg)
-                         .words_to_bytes_host(db_words).view(np.int8))
-    else:
-        db = jnp.asarray(db_words)
+    from repro.db import DatabaseSpec
+    db = jnp.asarray(DatabaseSpec.from_config(cfg)
+                     .pack_host(db_words, proto.db_view))
     keys = pir.batch_queries(np.random.default_rng(6), [3, N - 2], cfg)[0]
 
     plans = engine.candidate_plans(cfg, 2)

@@ -40,7 +40,8 @@ DB = pir.make_database(np.random.default_rng(0), N, 32)
 # ---------------------------------------------------------------------------
 
 def test_registry_names():
-    assert {"xor-dpf-2", "additive-dpf-2", "xor-dpf-k"} <= set(available())
+    assert {"xor-dpf-2", "additive-dpf-2", "xor-dpf-k",
+            "lwe-simple-1"} <= set(available())
     assert get("xor-dpf-2").n_parties(PIRConfig(n_items=N)) == 2
     with pytest.raises(KeyError, match="unknown protocol"):
         get("nope-9000")
@@ -49,6 +50,12 @@ def test_registry_names():
     assert get("xor-dpf-2").record_struct(cfg) == ((8,), np.uint32)
     assert get("xor-dpf-k").record_struct(cfg) == ((8,), np.uint32)
     assert get("additive-dpf-2").record_struct(cfg) == ((32,), np.uint8)
+    assert get("lwe-simple-1").record_struct(cfg) == ((32,), np.uint8)
+    # the single-server protocol: 1 party, hint-carrying, lwe share kind
+    lwe_proto = get("lwe-simple-1")
+    assert lwe_proto.n_parties(PIRConfig(n_items=N, n_servers=1)) == 1
+    assert lwe_proto.needs_hint and lwe_proto.share_kind == "lwe"
+    assert PIRConfig(n_items=N, protocol="lwe-simple-1").share_kind == "lwe"
 
 
 def test_config_protocol_defaults_and_mode_shim():
@@ -125,6 +132,146 @@ def test_plan_selection_rules():
     assert plan_for(PIRConfig(n_items=1 << 20), 8, backend="tpu").scan \
         == "pallas"
     assert big.scan == "jnp"     # CPU: interpret-mode Pallas would be slow
+
+
+# ---------------------------------------------------------------------------
+# registry conformance: ONE body every registered protocol must pass
+# ---------------------------------------------------------------------------
+
+def _conformance_cfg(name: str) -> PIRConfig:
+    n_servers = {"xor-dpf-k": 3, "lwe-simple-1": 1}.get(name, 2)
+    return PIRConfig(n_items=N, protocol=name, n_servers=n_servers)
+
+
+def _oracle_records(proto, db_words, indices):
+    """What reconstruction must return: u32 words (XOR algebras) or
+    Z_256 bytes (GEMM algebras)."""
+    if proto.share_kind == "xor":
+        return db_words[indices]
+    return pir.db_as_bytes(db_words)[indices]
+
+
+def _answer_one(proto, view_np, key):
+    """One party's answer for ONE query, eagerly, per share algebra.
+
+    Deliberately the single-key evaluation idiom (``dpf.eval_range`` /
+    Q=1 ``eval_bytes_batch``) the other fast-tier tests use: those
+    primitive shapes are already op-cached in-process, while the batched
+    vmap forms would each pay a fresh multi-second lowering here.
+    """
+    if proto.share_kind == "xor":
+        bits = (_party_bits_np(key, LOG_N) if key.root_seed.ndim > 1
+                else _bits_np(key, LOG_N))
+        return _answer_np(view_np, bits)                       # [W] u32
+    if proto.share_kind == "additive":
+        shares = np.asarray(dpf.eval_bytes_batch(
+            dpf.stack_keys([key]), 0, LOG_N))[0]
+        return (shares.astype(np.int64)
+                @ view_np.astype(np.int64)).astype(np.int32)   # [L] i32
+    # lwe: ct^T.D mod q in numpy (device answer parity lives in test_lwe)
+    ct = np.asarray(key.ct).view(np.uint32).astype(np.uint64)
+    ans = (ct @ view_np.astype(np.uint64)) & np.uint64(0xFFFFFFFF)
+    return ans.astype(np.uint32).view(np.int32)                # [L] i32
+
+
+def _eager_answers(proto, cfg, view_np, batches):
+    """All parties' [Q, ...] answers, slot by slot off the batched keys."""
+    out = []
+    for p in range(proto.n_parties(cfg)):
+        n = proto.n_queries(batches[p])
+        rows = [_answer_one(proto, view_np,
+                            jax.tree_util.tree_map(lambda x, i=i: x[i],
+                                                   batches[p]))
+                for i in range(n)]
+        out.append(np.stack(rows))
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(available()))
+def test_protocol_conformance(name):
+    """The registry contract, one shared body per protocol: query_gen_full
+    -> batch -> eager answers -> reconstruct_with matches the oracle; the
+    pad round-trip leaves real slots untouched; and answers flowing
+    through a QueryScheduler are epoch-tagged correctly across a publish.
+    Any protocol added to the registry is swept automatically."""
+    from repro.db import ShardedDatabase
+    from repro.launch.mesh import make_local_mesh
+    from repro.runtime.serve_loop import QueryScheduler
+
+    from repro.db import DatabaseSpec
+
+    cfg = _conformance_cfg(name)
+    proto = for_config(cfg)
+    k = proto.n_parties(cfg)
+    indices = [5, N - 1]
+    view_np = DatabaseSpec.from_config(cfg).pack_host(DB, proto.db_view)
+
+    full = [proto.query_gen_full(RNG, i, cfg) for i in indices]
+    states = [f[1] for f in full]
+    batches = [dpf.stack_keys([f[0][p] for f in full]) for p in range(k)]
+    for b in batches:
+        assert proto.n_queries(b) == 2
+
+    hint = (np.asarray(proto.hint_builder(cfg)(jnp.asarray(DB)))
+            if proto.needs_hint else None)
+    answers = _eager_answers(proto, cfg, view_np, batches)
+    rec = np.asarray(proto.reconstruct_with(answers, states, cfg=cfg,
+                                            hint=hint))
+    np.testing.assert_array_equal(rec, _oracle_records(proto, DB, indices))
+
+    # pad round-trip: pad -> answer -> slice == unpadded on real slots
+    padded = [proto.pad(b, 4) for b in batches]
+    for p in padded:
+        assert proto.n_queries(p) == 4
+    answers_p = _eager_answers(proto, cfg, view_np, padded)
+    rec_p = np.asarray(proto.reconstruct_with(
+        [a[:2] for a in answers_p], states, cfg=cfg, hint=hint))
+    np.testing.assert_array_equal(rec_p, rec)
+
+    # epoch tagging: the same eager answer path behind a QueryScheduler,
+    # across a publish — answers carry the epoch they computed against
+    db = ShardedDatabase(DB, cfg, make_local_mesh())
+    if proto.needs_hint:
+        db.register_hint(proto.name, proto.hint_builder(cfg),
+                         proto.hint_delta(cfg))
+
+    def dispatch(items):
+        epoch, views = db.snapshot((proto.db_view,))
+        v_np, sts = np.asarray(views[proto.db_view]), [it[1] for it in items]
+        ans = [np.stack([_answer_one(proto, v_np, it[0][p]) for it in items])
+               for p in range(k)]
+        return ans, sts, epoch
+
+    def finalize(raw, n):
+        ans, sts, epoch = raw
+        h = (np.asarray(db.hint(proto.name, epoch=epoch))
+             if proto.needs_hint else None)
+        return list(np.asarray(proto.reconstruct_with(
+            [a[:n] for a in ans], sts[:n], cfg=cfg, hint=h)))
+
+    sched = QueryScheduler(
+        collate=list, stage=lambda p: p, dispatch=dispatch,
+        finalize=finalize, buckets=(2,), epoch_of=lambda raw: raw[2])
+
+    fut0 = sched.submit(proto.query_gen_full(RNG, 9, cfg))
+    sched.submit(proto.query_gen_full(RNG, 9, cfg))
+    sched.pump()
+    assert fut0.epoch == 0
+    np.testing.assert_array_equal(fut0.result(0),
+                                  _oracle_records(proto, DB, [9])[0])
+
+    new_val = np.random.default_rng(8).integers(
+        0, 1 << 32, size=(1, 8), dtype=np.uint32)
+    db.stage([9], new_val)
+    assert db.publish() == 1
+    updated = DB.copy()
+    updated[9] = new_val
+    fut1 = sched.submit(proto.query_gen_full(RNG, 9, cfg))
+    sched.submit(proto.query_gen_full(RNG, 9, cfg))
+    sched.pump()
+    assert fut1.epoch == 1
+    np.testing.assert_array_equal(fut1.result(0),
+                                  _oracle_records(proto, updated, [9])[0])
 
 
 # ---------------------------------------------------------------------------

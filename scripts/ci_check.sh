@@ -25,6 +25,11 @@ python examples/db_updates.py
 # hint reuse, publish -> hint delta + client cache refresh (cheap: the
 # LWE GEMM has no GGM chains, its serve step compiles in ~1 s)
 python examples/single_server.py
+# replica-plane smoke: 2-replica fleet behind the router — publish
+# fan-out converges epochs, a mid-load kill fails over with zero lost
+# answers, and a warm rejoin serves its first query without re-tuning
+# (PIR_SMOKE_REPL scale: 3 cheap LWE compiles total)
+python examples/replicas.py
 # engine-plane smoke: tiny-budget autotune (interpret mode, <=2 candidates
 # per kernel, nothing persisted) + the heuristic-fallback gate — asserts
 # an empty plan cache resolves to exactly the pre-engine plan_for choices

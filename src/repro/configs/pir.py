@@ -52,6 +52,13 @@ PIR_SMOKE_UPD = PIRConfig(n_items=1 << 10, item_bytes=32,
 PIR_SMOKE_LWE = PIRConfig(n_items=1 << 14, item_bytes=32,
                           protocol="lwe-simple-1", n_servers=1,
                           batch_queries=4)
+# replica-plane smoke (examples/replicas.py, benchmarks/bench_replicas.py):
+# every replica pays its own serve-step compile at construction, so the
+# fleet demos run the cheap LWE step at 2^12 records to keep N compiles
+# inside the CI gate's budget
+PIR_SMOKE_REPL = PIRConfig(n_items=1 << 12, item_bytes=32,
+                           protocol="lwe-simple-1", n_servers=1,
+                           batch_queries=4)
 
 PIR_CONFIGS = {
     "pir-512m": PIR_512M,
@@ -67,4 +74,5 @@ PIR_CONFIGS = {
     "pir-smoke-k3": PIR_SMOKE_K3,
     "pir-smoke-upd": PIR_SMOKE_UPD,
     "pir-smoke-lwe": PIR_SMOKE_LWE,
+    "pir-smoke-repl": PIR_SMOKE_REPL,
 }

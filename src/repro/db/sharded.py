@@ -91,10 +91,17 @@ class _HintSpec:
 
 @dataclass
 class PublishedDelta:
-    """Public metadata of one published epoch (the online-update log)."""
+    """Public metadata of one published epoch (the online-update log).
+
+    ``rows``/``vals`` are the deduplicated (last-write-wins), unpadded
+    delta: replaying ``stage(rows, vals); publish()`` against any replica
+    of the previous epoch reproduces this epoch byte-for-byte — which is
+    exactly what the replica plane's fan-out/catch-up does.
+    """
     epoch: int                     # epoch the delta produced
     rows: np.ndarray               # deduplicated row indices written
     n_staged: int                  # staged entries folded into it
+    vals: Optional[np.ndarray] = None   # deduplicated [R, item_words] u32
 
 
 @dataclass
@@ -135,6 +142,7 @@ class ShardedDatabase:
         self._scatter_cache: dict = {}
         self._pack_cache: dict = {}
         self._hint_specs: Dict[str, _HintSpec] = {}
+        self._subscribers: List = []   # publish fan-out callbacks
         host = self.spec.validate_words(db_words)
         self._current = _Epoch(epoch=0,
                                views={"words": self._place(host)})
@@ -278,6 +286,26 @@ class ShardedDatabase:
             self._staged_vals.append(np.array(vals, np.uint32, copy=True))
             return sum(len(r) for r in self._staged_rows)
 
+    def subscribe(self, fn) -> "callable":
+        """Register ``fn(delta: PublishedDelta)`` to fire after every
+        :meth:`publish` that produced a new epoch; returns an unsubscribe
+        callable.
+
+        This is the multi-subscriber fan-out seam the replica plane hangs
+        off: the front-tier router subscribes to each replica's database
+        to track its epoch (bounded-staleness routing), and a downstream
+        replica can replay ``delta.rows``/``delta.vals`` into its own
+        database to reproduce the epoch exactly. Callbacks run on the
+        publishing thread, OUTSIDE the database lock (a subscriber may
+        itself stage/publish into another database); they fire in epoch
+        order because publishes are serialized by the lock.
+        """
+        self._subscribers.append(fn)
+        def _unsubscribe(fn=fn):
+            if fn in self._subscribers:
+                self._subscribers.remove(fn)
+        return _unsubscribe
+
     def publish(self) -> int:
         """Apply the staged delta to every resident view; bump the epoch.
 
@@ -285,7 +313,9 @@ class ShardedDatabase:
         and word values cross the host→device boundary — never a full
         re-pack or re-placement. The previous epoch's views stay pinned
         (double buffer) until the *next* publish. No-op (same epoch) when
-        nothing is staged. Returns the now-current epoch.
+        nothing is staged. Returns the now-current epoch. Subscribers
+        (:meth:`subscribe`) are notified of the new epoch's delta after
+        the swap, outside the lock.
         """
         with self._lock:
             rows = (np.concatenate(self._staged_rows) if self._staged_rows
@@ -306,13 +336,13 @@ class ShardedDatabase:
             _, first_of_rev = np.unique(rows[::-1], return_index=True)
             keep = np.sort(len(rows) - 1 - first_of_rev)
             rows, vals = rows[keep], vals[keep]
+            rows_u, vals_u = rows, vals           # pre-padding references
             # hint deltas need the deduplicated UNPADDED delta (a padded
             # duplicate would subtract its old row twice) and the old word
             # rows gathered from the pre-publish view, before the scatter
             delta_hints = {n: h for n, h in self._current.hints.items()
                            if self._hint_specs[n].delta is not None}
             if delta_hints:
-                rows_u, vals_u = rows, vals       # pre-padding references
                 old_words = self._current.views["words"][
                     jnp.asarray(rows_u.astype(np.int32))]
             # pad the delta to a power of two (replicating one entry:
@@ -343,10 +373,14 @@ class ShardedDatabase:
             self._current = _Epoch(epoch=self._retired.epoch + 1,
                                    views=new_views, hints=new_hints)
             self.stats.n_publishes += 1
-            self.published.append(PublishedDelta(
-                epoch=self._current.epoch, rows=rows[: len(keep)],
-                n_staged=n_staged))
-            return self._current.epoch
+            delta = PublishedDelta(epoch=self._current.epoch, rows=rows_u,
+                                   n_staged=n_staged, vals=vals_u)
+            self.published.append(delta)
+            epoch = self._current.epoch
+            subscribers = tuple(self._subscribers)
+        for fn in subscribers:       # outside the lock (see subscribe())
+            fn(delta)
+        return epoch
 
     def _scatter(self, view: str, r: int):
         """Cached compiled delta application for (view, padded row count).

@@ -45,7 +45,7 @@ __all__ = [
     "predicted_step_bytes", "serve_kernels", "SMOKE_BUDGET", "TuneBudget",
     "TuneResult", "autotune", "candidate_plans", "heuristic_plan",
     "plan_label", "problem_shape", "tune", "tune_standalone",
-    "plan_cache", "resolve", "plan_report",
+    "plan_cache", "resolve", "plan_report", "record_plans",
 ]
 
 _PLAN_CACHE: Optional[PlanCache] = None
@@ -78,6 +78,29 @@ def resolve(cfg, n_queries: int, *, backend_name: Optional[str] = None,
         return _replace(hit, collective=collective)
     plan = heuristic_plan(cfg, n_queries, backend=be, chunk_log=chunk_log)
     return _replace(plan, collective=collective)
+
+
+def record_plans(cfg, plans: dict, *, backend_name: Optional[str] = None,
+                 persist: bool = False) -> int:
+    """Seed the process-wide cache with ``{bucket: plan}`` warm entries.
+
+    The replica plane's cross-replica warm start: a healthy replica
+    exports its per-bucket plans (``BucketedServeFns.plans``), a rejoining
+    one records them here before building serve fns, so its first query is
+    served from a measured plan — no re-tuning, no heuristic fallback.
+    Warm entries never displace tuned ones (``PlanCache.warm_put``).
+    Returns the number of entries written; ``persist=True`` also saves the
+    cache file so the warm start survives the process.
+    """
+    be = backend_name or backend()
+    cache = plan_cache()
+    sig = spec_signature(cfg)
+    written = sum(
+        cache.warm_put(be, cfg.protocol, sig, bucket, plan)
+        for bucket, plan in plans.items())
+    if persist and written:
+        cache.save()
+    return written
 
 
 def plan_report(cfg, plan, bucket: int, *, n_shards: int = 1) -> dict:

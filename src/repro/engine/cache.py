@@ -33,8 +33,8 @@ SCHEMA_VERSION = 1
 DEFAULT_PATH = os.path.join("results", "plan_cache.json")
 CACHE_ENV = "REPRO_PLAN_CACHE"
 
-#: ExecutionPlan fields a cache entry round-trips (provenance is derived:
-#: every loaded plan is by definition tuned)
+#: ExecutionPlan fields a cache entry round-trips; provenance is stored
+#: alongside (entry-level, default "tuned" for pre-provenance files)
 _PLAN_FIELDS = ("expand", "scan", "chunk_log", "collective",
                 "tile_r", "tile_q", "tile_l")
 
@@ -63,7 +63,7 @@ def plan_to_dict(plan) -> Dict:
     return {f: getattr(plan, f) for f in _PLAN_FIELDS}
 
 
-def plan_from_dict(d: Dict):
+def plan_from_dict(d: Dict, provenance: str = "tuned"):
     from repro.core.protocol import ExecutionPlan
     unknown = set(d) - set(_PLAN_FIELDS)
     if unknown:
@@ -72,7 +72,7 @@ def plan_from_dict(d: Dict):
     for f in ("expand", "scan"):
         if f not in fields or not isinstance(fields[f], str):
             raise ValueError(f"plan entry missing/invalid {f!r}")
-    return ExecutionPlan(provenance="tuned", **fields)
+    return ExecutionPlan(provenance=provenance, **fields)
 
 
 class PlanCache:
@@ -144,15 +144,35 @@ class PlanCache:
         if entry is None:
             return None
         try:
-            return plan_from_dict(entry["plan"])
+            return plan_from_dict(entry["plan"],
+                                  entry.get("provenance", "tuned"))
         except (ValueError, KeyError, TypeError):
             return None
 
     def put(self, backend: str, protocol: str, spec_sig: str, bucket: int,
-            plan, meta: Optional[Dict] = None) -> None:
+            plan, meta: Optional[Dict] = None,
+            provenance: str = "tuned") -> None:
         self.plans[plan_key(backend, protocol, spec_sig, bucket)] = {
             "plan": plan_to_dict(plan), "meta": meta or {},
+            "provenance": provenance,
         }
+
+    def warm_put(self, backend: str, protocol: str, spec_sig: str,
+                 bucket: int, plan, meta: Optional[Dict] = None) -> bool:
+        """Seed an entry only if the slot is empty (provenance ``"warm"``).
+
+        The cross-replica warm-start path: a rejoining replica records the
+        plans a healthy peer is serving with, so its first serve-fn build
+        resolves to a measured plan instead of re-paying tuning (or worse,
+        falling to the heuristic). A tuned entry always wins over a warm
+        one — never overwrite. Returns whether an entry was written.
+        """
+        key = plan_key(backend, protocol, spec_sig, bucket)
+        if key in self.plans:
+            return False
+        self.plans[key] = {"plan": plan_to_dict(plan), "meta": meta or {},
+                           "provenance": "warm"}
+        return True
 
     def __len__(self) -> int:
         return len(self.plans)

@@ -49,6 +49,28 @@ def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     return jax.sharding.Mesh(devs, ("data", "model"))
 
 
+def split_devices(n_groups: int, devices=None, *,
+                  min_per_group: int = 1) -> list:
+    """Partition the live device list into ``n_groups`` disjoint groups.
+
+    The replica plane carves one serve replica per group (each group then
+    becomes its own sub-mesh via ``runtime/elastic.carve_submeshes``).
+    Groups are equal-sized; leftover devices idle until the next resize
+    (same policy as ``plan_mesh``). When the host has fewer than
+    ``n_groups * min_per_group`` devices, every group gets the FULL device
+    list — the single-host degenerate case: replicas share silicon but
+    keep separate schedulers, compiled steps, and DB placements, exactly
+    how k parties share the one CPU device on this container.
+    """
+    if n_groups < 1:
+        raise ValueError(f"n_groups must be >= 1, got {n_groups}")
+    devs = list(devices if devices is not None else jax.devices())
+    per = len(devs) // n_groups
+    if per < max(min_per_group, 1):
+        return [list(devs) for _ in range(n_groups)]
+    return [devs[i * per:(i + 1) * per] for i in range(n_groups)]
+
+
 def mesh_axis_size(mesh: jax.sharding.Mesh, name: str) -> int:
     return mesh.shape.get(name, 1)
 

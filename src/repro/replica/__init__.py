@@ -1,0 +1,19 @@
+"""The replica plane: multi-replica serving behind a front-tier router.
+
+IM-PIR's throughput story is replication — many independent clusters,
+each scanning its own full copy of the database (paper Take-away 5).
+This package lifts that topology one tier: N :class:`ServeReplica`
+deployments (own sub-mesh, own compiled steps, own ``ShardedDatabase``)
+behind one :class:`Router` doing power-of-two-choices balancing,
+health-driven failover with zero lost queries, and bounded-staleness
+epoch propagation (DESIGN.md §11).
+"""
+from repro.replica.metrics import export_json, replica_snapshot, snapshot
+from repro.replica.registry import ReplicaRegistry
+from repro.replica.replica import ReplicaLost, ServeReplica, make_pir
+from repro.replica.router import Router, Session
+
+__all__ = [
+    "ReplicaLost", "ReplicaRegistry", "Router", "ServeReplica", "Session",
+    "export_json", "make_pir", "replica_snapshot", "snapshot",
+]

@@ -47,6 +47,30 @@ def rebuild_mesh(live_devices: Optional[Sequence] = None, *,
     return Mesh(grid, cfg.axes)
 
 
+def carve_submeshes(n_replicas: int, *, model_axis: int,
+                    live_devices: Optional[Sequence] = None,
+                    prefer_pods: int = 1) -> list:
+    """One sub-mesh per serve replica, carved from the live device set.
+
+    The replica plane's join/leave path: each replica owns a disjoint
+    device group (``launch/mesh.split_devices``) re-meshed by
+    :func:`rebuild_mesh` — so a replica leaving returns its devices to the
+    pool and a rejoining one gets a fresh sub-mesh without perturbing its
+    peers. Each sub-mesh keeps the pinned ``model`` (DB-shard) axis and
+    grows its own ``data`` axis, so every replica holds a full DB replica
+    sharded the same way (the IM-PIR cluster topology, one tier up).
+
+    On a host with fewer than ``n_replicas * model_axis`` devices, the
+    groups share the full device set (see ``split_devices``).
+    """
+    from repro.launch.mesh import split_devices
+    devs = list(live_devices if live_devices is not None
+                else jax.devices())
+    groups = split_devices(n_replicas, devs, min_per_group=model_axis)
+    return [rebuild_mesh(g, model_axis=model_axis, prefer_pods=prefer_pods)
+            for g in groups]
+
+
 def reshard(tree: Any, shardings: Any) -> Any:
     """Move a pytree onto new shardings (cross-mesh device_put)."""
     return jax.tree_util.tree_map(

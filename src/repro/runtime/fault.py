@@ -36,6 +36,19 @@ class HeartbeatRegistry:
     def beat(self, participant: str):
         self.last_seen[participant] = self.clock()
 
+    def remove(self, participant: str) -> bool:
+        """Retire a departed participant entirely.
+
+        A participant that *left* (elastic leave, replica decommission) is
+        not a failure: without removal its last beat ages past ``timeout``
+        and :meth:`suspects` reports it forever, poisoning every health
+        check. Returns whether the participant was registered.
+        """
+        return self.last_seen.pop(participant, None) is not None
+
+    #: alias — "forget a participant" reads better at some call sites
+    forget = remove
+
     def suspects(self) -> List[str]:
         now = self.clock()
         return [p for p, t in self.last_seen.items()
@@ -46,17 +59,41 @@ class HeartbeatRegistry:
         return [p for p in self.last_seen if p not in bad]
 
 
+@dataclass
+class RetryStats:
+    """Out-param of :func:`retry_step`: the attempt accounting a caller
+    needs for metrics (the replica router reports resubmission attempts
+    and total backoff per failover, ``replica/metrics.py``)."""
+    attempts: int = 0            # calls made (1 == first try succeeded)
+    retried: int = 0             # failures that were retried
+    slept_s: float = 0.0         # total backoff requested
+
+
 def retry_step(fn: Callable, *args, retries: int = 3, base_delay: float = 0.5,
+               max_delay: float = 30.0,
                sleep: Callable[[float], None] = time.sleep,
-               retriable=(RuntimeError, OSError), **kwargs):
-    """Run ``fn`` with exponential backoff on transient failures."""
+               retriable=(RuntimeError, OSError),
+               stats: Optional[RetryStats] = None, **kwargs):
+    """Run ``fn`` with exponential backoff on transient failures.
+
+    The per-attempt delay doubles from ``base_delay`` but is capped at
+    ``max_delay`` — unbounded growth turns a long outage into hour-scale
+    sleeps that outlive the outage itself. Pass a :class:`RetryStats` to
+    receive the attempt count (metrics surface it per failover).
+    """
     for attempt in range(retries + 1):
+        if stats is not None:
+            stats.attempts += 1
         try:
             return fn(*args, **kwargs)
         except retriable:
             if attempt == retries:
                 raise
-            sleep(base_delay * (2 ** attempt))
+            delay = min(base_delay * (2 ** attempt), max_delay)
+            if stats is not None:
+                stats.retried += 1
+                stats.slept_s += delay
+            sleep(delay)
 
 
 @dataclass

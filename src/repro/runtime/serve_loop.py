@@ -93,24 +93,56 @@ class AnswerFuture:
     the result when the scheduler has an ``epoch_of`` source; ``None``
     otherwise) — clients of an online-updated DB read it to know which
     version their record reflects.
+
+    Completion is **first-wins**: once resolved, later ``set_result`` /
+    ``set_exception`` calls are ignored (they return ``False``). That is
+    what makes a kill-vs-complete race benign — a replica being torn down
+    while a batch finishes delivers whichever terminal event lands first,
+    exactly once (``replica/router.py`` failover relies on this).
     """
 
     def __init__(self):
         self._ev = threading.Event()
+        self._lock = threading.Lock()
         self._value: Any = None
         self._exc: Optional[BaseException] = None
+        self._callbacks: List[Callable[["AnswerFuture"], None]] = []
         self.epoch: Optional[int] = None
 
-    def set_result(self, value: Any):
-        self._value = value
-        self._ev.set()
+    def _resolve(self, value: Any, exc: Optional[BaseException]) -> bool:
+        with self._lock:
+            if self._ev.is_set():
+                return False
+            self._value, self._exc = value, exc
+            callbacks, self._callbacks = self._callbacks, []
+            self._ev.set()
+        for cb in callbacks:        # outside the lock: callbacks may block
+            cb(self)
+        return True
 
-    def set_exception(self, exc: BaseException):
-        self._exc = exc
-        self._ev.set()
+    def set_result(self, value: Any) -> bool:
+        return self._resolve(value, None)
+
+    def set_exception(self, exc: BaseException) -> bool:
+        return self._resolve(None, exc)
+
+    def add_done_callback(self, fn: Callable[["AnswerFuture"], None]):
+        """Call ``fn(self)`` when the future resolves (immediately if it
+        already has). Runs on the resolving thread, outside any scheduler
+        lock — the replica router chains failover resubmission here."""
+        with self._lock:
+            if not self._ev.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
 
     def done(self) -> bool:
         return self._ev.is_set()
+
+    def exception(self) -> Optional[BaseException]:
+        """The failure this future resolved with, or None (also None while
+        still pending — pair with :meth:`done`)."""
+        return self._exc
 
     def result(self, timeout: Optional[float] = None) -> Any:
         if not self._ev.wait(timeout):
@@ -179,6 +211,7 @@ class QueryScheduler:
         depth: int = PIPELINE_DEPTH,
         clock: Callable[[], float] = time.monotonic,
         epoch_of: Optional[Callable[[Any], Optional[int]]] = None,
+        heartbeat: Optional[Callable[[], None]] = None,
     ):
         self._collate = collate
         self._stage = stage
@@ -191,6 +224,11 @@ class QueryScheduler:
         self.monitor = monitor if monitor is not None else StragglerMonitor()
         self.depth = max(depth, 1)
         self.clock = clock
+        #: liveness hook: called once per dispatch-loop iteration (and per
+        #: pump), so a HeartbeatRegistry sees silence exactly when the
+        #: session thread stops turning (killed, hung, or crashed). The
+        #: replica plane assigns it at registry join.
+        self.heartbeat = heartbeat
         self.stats = ServeStats()
 
         self._cv = threading.Condition()
@@ -198,22 +236,30 @@ class QueryScheduler:
         self.queues: Dict[str, List[_Batch]] = {
             f"cluster{i}": [] for i in range(self.n_clusters)}
         self._rr = 0                          # round-robin lane counter
+        self._n_inflight = 0                  # real queries dispatched, unresolved
         self._thread: Optional[threading.Thread] = None
         self._stopping = False
         self._closed = False                  # terminal: set by stop()/death
+        self._abort_exc: Optional[BaseException] = None   # set by kill()
 
     # ------------------------------------------------------------------
     # intake
     # ------------------------------------------------------------------
 
-    def submit(self, item: Any) -> AnswerFuture:
+    def submit(self, item: Any, *, future: Optional[AnswerFuture] = None
+               ) -> AnswerFuture:
         """Enqueue one query payload; returns its future.
+
+        ``future`` re-enqueues work under an *existing* future — the
+        replica router's failover handoff moves a dead replica's
+        undispatched queries (item, future) onto a healthy scheduler
+        without its clients ever seeing a new handle.
 
         Raises ``RuntimeError`` once the session is closed (``stop()`` was
         called on a running session, or its thread died) — enqueueing into
         a dead loop would leave the future unresolved forever.
         """
-        fut = AnswerFuture()
+        fut = future if future is not None else AnswerFuture()
         with self._cv:
             if self._closed:
                 raise RuntimeError(
@@ -224,6 +270,70 @@ class QueryScheduler:
                 self._cut_locked(self.buckets[-1])
             self._cv.notify()
         return fut
+
+    @property
+    def queue_depth(self) -> int:
+        """Real queries accepted but not yet resolved: pending + cut into
+        lane queues + dispatched in flight (pad slots excluded). The
+        router's power-of-two-choices balancing reads this."""
+        with self._cv:
+            return (len(self._pending) + self._n_inflight
+                    + sum(len(b.items) for lane in self.queues.values()
+                          for b in lane))
+
+    def drain_handoff(self) -> List[Tuple[Any, AnswerFuture]]:
+        """Graceful leave: close intake and hand back every query that has
+        NOT been dispatched, as FIFO ``(item, future)`` pairs.
+
+        Batches already dispatched are not returned — they complete (and
+        resolve their futures) here, against this scheduler's data plane.
+        The caller re-enqueues the returned pairs elsewhere via
+        ``submit(item, future=fut)``; the futures move with the work, so
+        no client ever observes the migration. A running session thread
+        finishes its in-flight work and exits (stop semantics without the
+        join); the scheduler rejects new submits from this point on.
+        """
+        out: List[Tuple[Any, AnswerFuture]] = []
+        with self._cv:
+            self._closed = True
+            self._stopping = True
+            for lane in self.queues.values():
+                for batch in lane:
+                    out.extend(zip(batch.items, batch.futures))
+                lane.clear()
+            while self._pending:
+                item, fut, _ = self._pending.popleft()
+                out.append((item, fut))
+            self._cv.notify_all()
+        return out
+
+    def kill(self, exc: BaseException):
+        """Hard death (crash injection / fault handling): fail every
+        outstanding future with ``exc`` and stop without draining.
+
+        Queued and pending work is failed from the calling thread; a
+        running session thread aborts its loop and fails its in-flight
+        batches the same way, then exits. Races with completing batches
+        resolve first-wins (:class:`AnswerFuture`): a batch that beats the
+        kill delivers its answers, everything else fails — either way each
+        future resolves exactly once, which is what lets the router's
+        failover resubmit the losses with zero dropped queries.
+        """
+        victims: List[AnswerFuture] = []
+        with self._cv:
+            self._closed = True
+            self._stopping = True
+            self._abort_exc = exc
+            for lane in self.queues.values():
+                for batch in lane:
+                    victims.extend(batch.futures)
+                lane.clear()
+            while self._pending:
+                _, fut, _ = self._pending.popleft()
+                victims.append(fut)
+            self._cv.notify_all()
+        for fut in victims:          # outside the lock: callbacks may block
+            fut.set_exception(exc)
 
     def flush(self):
         """Cut every pending query into batches now (end-of-stream)."""
@@ -296,6 +406,8 @@ class QueryScheduler:
             # holds the old epoch's immutable arrays and finishes against
             # them)
             batch.epoch = self._epoch_of(raw)
+        with self._cv:
+            self._n_inflight += len(batch.items)
         return batch, raw, t0
 
     def _complete(self, batch: _Batch, raw: Any, t0: float):
@@ -309,6 +421,9 @@ class QueryScheduler:
             for fut in batch.futures:
                 fut.set_exception(e)
             raise
+        finally:
+            with self._cv:
+                self._n_inflight -= len(batch.items)
         self.monitor.record(batch.cluster, dt)
         self.stats.observe_window(t0, t0 + dt)
         self.stats.latencies.append(dt)
@@ -325,6 +440,8 @@ class QueryScheduler:
         Stages/dispatches batch k+1 before blocking on batch k, so host-side
         key staging overlaps device compute. Returns #queries answered.
         """
+        if self.heartbeat is not None:
+            self.heartbeat()
         self.flush()
         answered0 = self.stats.answered
         inflight: deque = deque()
@@ -359,6 +476,7 @@ class QueryScheduler:
         with self._cv:
             self._closed = False
             self._stopping = False
+            self._abort_exc = None
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="pir-scheduler")
         self._thread.start()
@@ -395,7 +513,11 @@ class QueryScheduler:
         try:
             while True:
                 batch = None
+                if self.heartbeat is not None:
+                    self.heartbeat()
                 with self._cv:
+                    if self._abort_exc is not None:   # kill(): no draining
+                        raise self._abort_exc
                     self._cut_ripe_locked()
                     if self._stopping:
                         while self._pending:
@@ -424,20 +546,21 @@ class QueryScheduler:
             self._fail_outstanding(inflight, e)
 
     def _fail_outstanding(self, inflight, exc: BaseException):
+        victims: List[AnswerFuture] = []
         for batch, _, _ in inflight:
-            for fut in batch.futures:
-                if not fut.done():
-                    fut.set_exception(exc)
+            victims.extend(batch.futures)
         with self._cv:
             self._closed = True      # dead session: reject future submits
+            self._n_inflight = 0
             for lane in self.queues.values():
                 for batch in lane:
-                    for fut in batch.futures:
-                        fut.set_exception(exc)
+                    victims.extend(batch.futures)
                 lane.clear()
             while self._pending:
                 _, fut, _ = self._pending.popleft()
-                fut.set_exception(exc)
+                victims.append(fut)
+        for fut in victims:          # outside the lock: done-callbacks may
+            fut.set_exception(exc)   # re-enter other schedulers (failover)
 
 
 class PIRServeLoop:

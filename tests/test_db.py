@@ -158,6 +158,39 @@ def test_stage_validates_and_publish_applies_last_write_wins(mesh):
     assert db.publish() == 1
 
 
+def test_publish_notifies_subscribers_with_replayable_delta(mesh):
+    """Multi-subscriber fan-out: every publish delivers a PublishedDelta
+    whose deduped (rows, vals) replayed into a second database reproduces
+    the epoch byte-for-byte (the replica plane's propagation seam)."""
+    src, dst = _fresh_db(mesh), _fresh_db(mesh)
+    seen = []
+    unsubscribe = src.subscribe(seen.append)
+    src.subscribe(lambda d: dst.stage(d.rows, d.vals) and dst.publish())
+    v1 = RNG.integers(0, 1 << 32, size=(1, 8), dtype=np.uint32)
+    v2 = RNG.integers(0, 1 << 32, size=(1, 8), dtype=np.uint32)
+    src.stage([9], v1)
+    src.stage([9], v2)                       # dedup: last write wins
+    src.stage([3], v1)
+    assert src.publish() == 1
+    assert src.publish() == 1                # no-op publish: no callback
+    assert [d.epoch for d in seen] == [1]
+    np.testing.assert_array_equal(np.sort(seen[0].rows), [3, 9])
+    assert seen[0].vals.shape == (2, 8)      # deduped, unpadded
+    assert seen[0].n_staged == 3
+    # the replaying subscriber converged to identical epoch AND contents
+    assert dst.epoch == 1
+    np.testing.assert_array_equal(np.asarray(dst.view("words")),
+                                  np.asarray(src.view("words")))
+    # unsubscribe stops delivery; the other subscriber keeps receiving
+    unsubscribe()
+    src.stage([0], v1)
+    src.publish()
+    assert [d.epoch for d in seen] == [1]
+    assert dst.epoch == 2
+    np.testing.assert_array_equal(np.asarray(dst.view("words")),
+                                  np.asarray(src.view("words")))
+
+
 def test_byte_view_incremental_after_random_writes(mesh):
     """Random row writes keep the byte view consistent WITHOUT a second
     full pack — the delta scatter maintains it in place."""

@@ -1,0 +1,501 @@
+"""Replica plane: router balancing, failover, epochs, registry, metrics.
+
+Fast tier: the router's control plane driven by fake replicas honoring
+the ``ServeReplica`` surface (deterministic, no XLA compiles) — P2C
+balancing, session affinity, zero-lost failover, graceful handoff,
+bounded-staleness eligibility, delta-log catch-up, registry health. Slow
+tier: two REAL ``ServeReplica`` deployments over the single-server LWE
+protocol (cheap compiles — no GGM expansion) — kill one mid-load and
+assert every future resolves byte-correct with a valid epoch tag, then
+rejoin it warm and assert the plan cache hit via provenance.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.replica import (ReplicaLost, ReplicaRegistry, Router,
+                           ServeReplica, metrics)
+from repro.runtime.serve_loop import AnswerFuture, ServeStats
+
+
+# ---------------------------------------------------------------------------
+# fake replicas: the ServeReplica surface, no data plane
+# ---------------------------------------------------------------------------
+
+class FakeDelta:
+    def __init__(self, epoch, rows, vals):
+        self.epoch, self.rows, self.vals = epoch, rows, vals
+
+
+class FakeDB:
+    """Epoch counter + delta recorder with the subscribe/stage/publish
+    surface the router's propagation path uses."""
+
+    def __init__(self):
+        self.epoch = 0
+        self.applied = []            # [(rows, vals), ...] across publishes
+        self._staged = []
+        self._subs = []
+
+    def subscribe(self, fn):
+        self._subs.append(fn)
+        return lambda: self._subs.remove(fn)
+
+    def stage(self, rows, vals):
+        self._staged.append((np.asarray(rows), np.asarray(vals)))
+        return len(self._staged)
+
+    def publish(self):
+        if not self._staged:
+            return self.epoch
+        self.epoch += 1
+        batch, self._staged = self._staged, []
+        self.applied.extend(batch)
+        for fn in list(self._subs):
+            fn(FakeDelta(self.epoch, batch[0][0], batch[0][1]))
+        return self.epoch
+
+
+class FakeReplica:
+    """Manually-pumped replica: queries queue until ``pump()`` resolves
+    them to ``("ans", item, replica_id)`` tagged with the DB epoch."""
+
+    def __init__(self, rid):
+        self.id = rid
+        self.db = FakeDB()
+        self.stats = ServeStats()
+        self._q = []                 # (item, future)
+        self._closed = False
+        self.running = False
+        self.lost = False
+        self.started = 0
+        self.warmed = None
+
+    @property
+    def epoch(self):
+        return self.db.epoch
+
+    @property
+    def queue_depth(self):
+        return len(self._q)
+
+    def submit(self, index):
+        fut = AnswerFuture()
+        self.resubmit(index, fut)
+        return fut
+
+    def resubmit(self, item, future):
+        if self._closed:
+            raise RuntimeError("scheduler is stopped")
+        self._q.append((item, future))
+        return future
+
+    def pump(self):
+        q, self._q = self._q, []
+        for item, fut in q:
+            fut.epoch = self.db.epoch
+            fut.set_result(("ans", item, self.id))
+            self.stats.answered += 1
+        return len(q)
+
+    def start(self):
+        self._closed = False
+        self.lost = False
+        self.running = True
+        self.started += 1
+
+    def close(self):
+        self._closed = True
+        self.running = False
+
+    def drain_handoff(self):
+        self._closed = True
+        self.running = False
+        q, self._q = self._q, []
+        return q
+
+    def kill(self, reason="injected fault"):
+        exc = ReplicaLost(self.id, reason)
+        self._closed = True
+        self.running = False
+        self.lost = True
+        victims, self._q = self._q, []
+        for _, fut in victims:
+            fut.set_exception(exc)
+        return exc
+
+    def set_heartbeat(self, fn):
+        self.heartbeat = fn
+
+    def subscribe_epochs(self, fn):
+        return self.db.subscribe(lambda d: fn(d.epoch))
+
+    def export_plans(self):
+        return {4: "fake-plan"}
+
+    def warm_start(self, plans, persist=False):
+        self.warmed = dict(plans)
+        return len(plans)
+
+
+def make_router(n=2, **kw):
+    kw.setdefault("rng", np.random.default_rng(0))
+    kw.setdefault("sleep", lambda s: None)
+    router = Router(**kw)
+    reps = [router.attach(FakeReplica(f"r{i}")) for i in range(n)]
+    return router, reps
+
+
+# ---------------------------------------------------------------------------
+# routing: P2C + affinity
+# ---------------------------------------------------------------------------
+
+def test_round_trip_and_epoch_tag():
+    router, (r0, r1) = make_router()
+    futs = [router.submit(i) for i in range(8)]
+    assert r0.queue_depth + r1.queue_depth == 8
+    r0.pump(), r1.pump()
+    for i, f in enumerate(futs):
+        ans, item, rid = f.result(0)
+        assert (ans, item) == ("ans", i) and rid in ("r0", "r1")
+        assert f.epoch == 0                      # tagged, valid at epoch 0
+
+
+def test_p2c_always_picks_the_shallower_of_two():
+    """With exactly two eligible replicas P2C samples both — the pick is
+    deterministic: the shallower queue."""
+    router, (r0, r1) = make_router()
+    for _ in range(8):
+        r0.resubmit("preload", AnswerFuture())   # r0 is 8 deep
+    futs = [router.submit(i) for i in range(6)]  # r1 never reaches 8
+    assert r1.queue_depth == 6                   # every pick went shallow
+    assert r0.queue_depth == 8
+    r0.pump(), r1.pump()
+    assert all(f.done() for f in futs)
+
+
+def test_session_affinity_sticks_while_eligible():
+    router, (r0, r1) = make_router()
+    s = router.session("client-a")
+    router.submit(0, session=s)
+    first = s.replica
+    assert first in ("r0", "r1")
+    # deepen the pinned replica: affinity must still win over P2C
+    pinned = router.replicas[first]
+    for _ in range(5):
+        pinned.resubmit("preload", AnswerFuture())
+    router.submit(1, session=s)
+    assert s.replica == first
+    # pinned replica quarantined -> session re-pins transparently
+    router.registry.report_failure(first)
+    router.submit(2, session=s)
+    other = ({"r0", "r1"} - {first}).pop()
+    assert s.replica == other
+
+
+# ---------------------------------------------------------------------------
+# failover: zero lost queries
+# ---------------------------------------------------------------------------
+
+def test_kill_fails_over_every_queued_query():
+    router, (r0, r1) = make_router()
+    s = router.session("pinned")
+    s.replica = "r0"                             # deterministic routing
+    futs = [router.submit(i, session=s) for i in range(5)]
+    assert r0.queue_depth == 5
+    r0.kill()                # fails the inner futures -> router resubmits
+    assert "r0" in router.registry.suspects()    # quarantined instantly
+    assert r1.queue_depth == 5                   # re-keyed by index onto r1
+    r1.pump()
+    for i, f in enumerate(futs):
+        assert f.result(0) == ("ans", i, "r1")   # zero lost, none dropped
+    assert router.failovers == 5
+    assert router.retry_stats.retried == 5
+
+
+def test_failover_exhaustion_propagates_last_error():
+    router, (r0,) = make_router(n=1, retries=2)
+    fut = router.submit(7)
+    r0.kill()
+    # no healthy peer: retries burn out, the outer future resolves (not
+    # hangs) with the failure
+    assert fut.done()
+    with pytest.raises(RuntimeError):
+        fut.result(0)
+    assert router.retry_stats.retried >= 1
+
+
+def test_submit_with_no_replicas_resolves_with_error():
+    router = Router(sleep=lambda s: None, retries=1)
+    fut = router.submit(0)
+    assert fut.done()
+    with pytest.raises(RuntimeError, match="no eligible replica"):
+        fut.result(0)
+
+
+def test_backoff_is_capped():
+    sleeps = []
+    router, (r0,) = make_router(n=1, retries=6, base_delay=1.0,
+                                max_delay=4.0, sleep=sleeps.append)
+    r0.kill()
+    router.submit(0)                             # routes to dead fleet
+    assert sleeps == [1.0, 2.0, 4.0, 4.0, 4.0, 4.0]
+
+
+def test_graceful_detach_hands_off_futures_unchanged():
+    router, (r0, r1) = make_router()
+    s = router.session("pinned")
+    s.replica = "r0"
+    futs = [router.submit(i, session=s) for i in range(4)]
+    moved = router.detach("r0")
+    assert moved == 4
+    assert router.resubmitted == 4
+    assert "r0" not in router.replicas
+    assert "r0" not in router.registry.members()  # left, not suspect
+    assert r1.queue_depth == 4                    # same futures moved over
+    r1.pump()
+    assert [f.result(0) for f in futs] == [("ans", i, "r1")
+                                           for i in range(4)]
+    assert router.failovers == 0                  # handoff, not failover
+
+
+# ---------------------------------------------------------------------------
+# epochs: fan-out, catch-up, bounded staleness, monotonic reads
+# ---------------------------------------------------------------------------
+
+def _delta(i):
+    return [i], np.full((1, 8), i, np.uint32)
+
+
+def test_publish_fans_out_and_tracks_epochs():
+    router, (r0, r1) = make_router()
+    router.update(*_delta(1))
+    assert router.publish() == 1
+    assert (r0.epoch, r1.epoch) == (1, 1)
+    assert router.epochs == {"r0": 1, "r1": 1}
+    assert router.publish() == 1                 # nothing staged: no churn
+    assert router.epoch_lag("r0") == 0
+
+
+def test_suspect_replica_skips_then_catches_up_in_order():
+    router, (r0, r1) = make_router()
+    router.update(*_delta(1))
+    router.publish()
+    router.registry.report_failure("r1")
+    router.update(*_delta(2))
+    router.update(*_delta(3))                    # two batches, one epoch
+    assert router.publish() == 2
+    assert (r0.epoch, r1.epoch) == (2, 1)        # r1 missed epoch 2
+    assert router.epoch_lag("r1") == 1
+    # recovery: next publish replays r1's missing suffix in order
+    router.registry.join(r1)
+    router.update(*_delta(4))
+    assert router.publish() == 3
+    assert (r0.epoch, r1.epoch) == (3, 3)
+    assert [r for r, _ in r1.db.applied] == [[1], [2], [3], [4]]
+
+
+def test_attach_replays_delta_log_for_late_joiner():
+    router, (r0,) = make_router(n=1)
+    for i in range(3):
+        router.update(*_delta(i))
+        router.publish()
+    late = FakeReplica("late")
+    router.attach(late)
+    assert late.epoch == 3                       # converged before serving
+    assert [r for r, _ in late.db.applied] == [[0], [1], [2]]
+    assert late.running
+
+
+def test_staleness_bound_excludes_laggards():
+    router, (r0, r1) = make_router(staleness_bound=0)
+    router.registry.report_failure("r1")
+    router.update(*_delta(1))
+    router.publish()
+    router.registry.join(r1)                     # healthy again, but stale
+    assert router._eligible(0) == ["r0"]         # lag 1 > bound 0
+    fut = router.submit(5)
+    assert r0.queue_depth == 1 and r1.queue_depth == 0
+    r0.pump()
+    assert fut.result(0)[2] == "r0"
+
+
+def test_session_min_epoch_gives_monotonic_reads():
+    router, (r0, r1) = make_router()
+    router.registry.report_failure("r1")
+    router.update(*_delta(1))
+    router.publish()                             # r0 at 1, r1 at 0
+    router.registry.join(r1)
+    s = router.session("reader")
+    fut = router.submit(3, session=s)
+    assert s.replica == "r0"                     # only r0 is at epoch >= 0...
+    r0.pump()
+    assert fut.result(0)[2] == "r0" and fut.epoch == 1
+    assert s.min_epoch == 1                      # floor ratcheted to the read
+    # r1 (epoch 0) can never serve this session until it catches up
+    for _ in range(8):
+        router.submit(4, session=s)
+    assert r1.queue_depth == 0
+    router.update(*_delta(2))
+    router.publish()                             # both converge to epoch 2
+    s2 = router.session("reader", min_epoch=2)   # explicit pin, same object
+    assert s2 is s and s.min_epoch == 2
+    assert sorted(router._eligible(2)) == ["r0", "r1"]
+
+
+def test_attach_warm_from_peer_records_plans():
+    router, (r0,) = make_router(n=1)
+    joiner = FakeReplica("j")
+    router.attach(joiner, warm_from=r0)
+    assert joiner.warmed == {4: "fake-plan"}
+    router.attach(FakeReplica("k"), warm_from={2: "p"})
+    assert router.replicas["k"].warmed == {2: "p"}
+
+
+# ---------------------------------------------------------------------------
+# registry health
+# ---------------------------------------------------------------------------
+
+def test_registry_silence_and_failure_are_independent_signals():
+    t = [0.0]
+    reg = ReplicaRegistry(timeout=10.0, clock=lambda: t[0])
+    a, b = FakeReplica("a"), FakeReplica("b")
+    reg.join(a), reg.join(b)
+    assert reg.suspects() == []
+    t[0] = 11.0
+    reg.beat("b")
+    assert reg.suspects() == ["a"]               # silence
+    reg.report_failure("b")
+    assert reg.suspects() == ["a", "b"]          # observed failure
+    reg.join(b)                                  # rejoin clears quarantine
+    assert reg.suspects() == ["a"]
+
+
+def test_registry_leave_is_not_failure_and_drops_late_beats():
+    reg = ReplicaRegistry(timeout=10.0, clock=lambda: 0.0)
+    a = FakeReplica("a")
+    reg.join(a)
+    assert reg.leave("a") is True
+    assert "a" not in reg and reg.suspects() == []
+    a.heartbeat()            # drained scheduler's last loop iterations
+    assert reg.members() == []                   # must not resurrect
+    assert reg.leave("a") is False
+    reg.report_failure("a")                      # unknown id: ignored
+    assert reg.suspects() == []
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_snapshot_and_export(tmp_path):
+    router, (r0, r1) = make_router()
+    s = router.session("pinned")
+    s.replica = "r0"
+    futs = [router.submit(i, session=s) for i in range(3)]
+    router.update(*_delta(1))
+    router.publish()
+    r0.kill()                                    # 3 failovers onto r1
+    r1.pump()
+    assert all(f.done() for f in futs)
+    snap = metrics.snapshot(router)
+    rows = {r["id"]: r for r in snap["replicas"]}
+    assert rows["r0"]["state"] == "lost"
+    assert rows["r1"]["state"] == "healthy"
+    assert rows["r1"]["answered"] == 3
+    assert snap["router"]["failovers"] == 3
+    assert snap["router"]["published_epoch"] == 1
+    assert snap["router"]["retry"]["attempts"] >= 6
+    path = metrics.export_json(router, str(tmp_path / "m" / "fleet.json"))
+    import json
+    with open(path) as f:
+        assert json.load(f)["router"]["failovers"] == 3
+
+
+# ---------------------------------------------------------------------------
+# data plane (slow): real 2-replica LWE fleet — kill, failover, rejoin hot
+# ---------------------------------------------------------------------------
+
+LOG_N = 10
+N = 1 << LOG_N
+
+
+@pytest.fixture()
+def lwe_fleet(monkeypatch):
+    """Two real single-server LWE replicas behind a router; in-memory
+    plan cache only (no cross-test pollution via the JSON file)."""
+    from repro import engine
+    from repro.config import PIRConfig
+    from repro.core import pir
+    from repro.runtime.elastic import carve_submeshes
+
+    monkeypatch.setenv("REPRO_PLAN_CACHE", "off")
+    engine.plan_cache(reload=True)
+    db = pir.make_database(np.random.default_rng(0), N, 32)
+    cfg = PIRConfig(n_items=N, item_bytes=32, protocol="lwe-simple-1",
+                    n_servers=1, batch_queries=4)
+    meshes = carve_submeshes(2, model_axis=1)
+    router = Router(rng=np.random.default_rng(0), base_delay=0.01,
+                    max_delay=0.1)
+    kw = dict(n_queries=4, buckets=(4,), max_wait_s=0.002,
+              client_rng=np.random.default_rng(7))
+    replicas = [
+        router.attach(ServeReplica(f"r{i}", db, cfg, meshes[i], **kw))
+        for i in range(2)
+    ]
+    yield router, replicas, db, cfg, meshes
+    for r in list(router.replicas.values()):
+        try:
+            r.close()
+        except Exception:
+            pass
+    engine.plan_cache(reload=True)
+
+
+@pytest.mark.slow
+def test_fleet_failover_zero_lost_then_rejoin_hot(lwe_fleet):
+    router, (r0, r1), db, cfg, meshes = lwe_fleet
+
+    # publish an update through the front tier: both replicas converge
+    new_val = np.arange(8, dtype=np.uint32).reshape(1, 8)
+    router.update([5], new_val)
+    assert router.publish() == 1
+    assert (r0.epoch, r1.epoch) == (1, 1)
+
+    # pin a session to r0 and load it up, then kill r0 mid-flight: every
+    # future must still resolve byte-correct with a valid epoch tag
+    s = router.session("victim")
+    s.replica = "r0"
+    indices = [5, 0, 9, N - 1, 3, 77, 5, 12]
+    futs = [router.submit(i, session=s) for i in indices]
+    r0.kill("injected mid-load fault")
+    rows = [np.asarray(f.result(timeout=180.0)) for f in futs]
+    expect = np.asarray(db, dtype=np.uint32).copy()
+    expect[5] = new_val
+    expect_bytes = expect.view(np.uint8).reshape(N, 32)
+    for i, row in zip(indices, rows):
+        np.testing.assert_array_equal(row, expect_bytes[i])
+    for f in futs:
+        assert f.epoch == 1                       # valid tag, post-update
+    assert "r0" in router.registry.suspects()
+    assert router.failovers >= 1                  # at least the queued ones
+
+    # rejoin: fresh replica, warmed from the healthy peer BEFORE its
+    # facade compiles -> first query is served off a non-heuristic plan
+    router.detach("r0")
+    r0b = ServeReplica("r0", db, cfg, meshes[0],
+                       warm_plans=r1.export_plans(), **dict(
+                           n_queries=4, buckets=(4,), max_wait_s=0.002,
+                           client_rng=np.random.default_rng(8)))
+    router.attach(r0b)
+    assert r0b.epoch == 1                         # delta log replayed
+    report = r0b.plan_report()
+    assert all(r["provenance"] in ("tuned", "warm") for r in report.values())
+    s2 = router.session("rejoined")
+    s2.replica = "r0"
+    fut = router.submit(5, session=s2)
+    np.testing.assert_array_equal(np.asarray(fut.result(timeout=180.0)),
+                                  expect_bytes[5])
+    assert fut.epoch == 1

@@ -7,10 +7,10 @@ import jax
 from repro.config import MeshConfig, OptimizerConfig, RunConfig
 from repro.configs import SMOKES
 from repro.configs.shapes import SMOKE_TRAIN
-from repro.launch.mesh import make_local_mesh
-from repro.runtime.elastic import plan_mesh, rebuild_mesh
+from repro.launch.mesh import make_local_mesh, split_devices
+from repro.runtime.elastic import carve_submeshes, plan_mesh, rebuild_mesh
 from repro.runtime.fault import (HeartbeatRegistry, PoisonPolicy,
-                                 StragglerMonitor, retry_step)
+                                 RetryStats, StragglerMonitor, retry_step)
 
 
 # ---------------------------------------------------------------------------
@@ -50,6 +50,56 @@ def test_retry_step_exhausts():
         retry_step(always, retries=2, sleep=lambda s: None)
 
 
+def test_heartbeat_remove_retires_departed_participant():
+    """Departure is not failure: a removed participant must stop showing
+    up as a suspect forever (the replica registry's leave path)."""
+    t = [0.0]
+    reg = HeartbeatRegistry(timeout=10.0, clock=lambda: t[0])
+    reg.beat("a")
+    reg.beat("b")
+    assert reg.remove("a") is True
+    assert reg.remove("a") is False              # already gone
+    assert reg.forget("nope") is False           # alias, unknown id
+    t[0] = 100.0                                 # way past timeout
+    assert reg.suspects() == ["b"]               # "a" never resurfaces
+    assert reg.healthy() == []
+
+
+def test_retry_step_backoff_is_capped():
+    calls = {"n": 0}
+    sleeps = []
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 7:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert retry_step(flaky, retries=6, base_delay=0.5, max_delay=2.0,
+                      sleep=sleeps.append) == "ok"
+    assert sleeps == [0.5, 1.0, 2.0, 2.0, 2.0, 2.0]   # capped, not 16.0
+
+
+def test_retry_step_surfaces_attempt_stats():
+    stats = RetryStats()
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert retry_step(flaky, retries=3, sleep=lambda s: None,
+                      stats=stats) == "ok"
+    assert stats.attempts == 3
+    assert stats.retried == 2
+    assert stats.slept_s == pytest.approx(0.5 + 1.0)
+    # stats accumulate across calls (the router reuses one instance)
+    retry_step(lambda: "ok", stats=stats, sleep=lambda s: None)
+    assert stats.attempts == 4 and stats.retried == 2
+
+
 def test_poison_policy_transitions():
     p = PoisonPolicy(max_consecutive=3)
     assert p.observe(1.0) == "ok"
@@ -87,6 +137,54 @@ def test_plan_mesh_shrinks_data_axis():
 def test_rebuild_mesh_local():
     mesh = rebuild_mesh(model_axis=1)
     assert "model" in mesh.axis_names
+
+
+def test_plan_mesh_non_pow2_device_counts():
+    """Stragglers rarely leave neat shapes: data rounds DOWN to the
+    largest power of two that fits; leftovers idle until the next
+    resize."""
+    assert plan_mesh(96, model_axis=16).shape == (4, 16)     # 96//16=6 -> 4
+    assert plan_mesh(17, model_axis=16).shape == (1, 16)
+    assert plan_mesh(3, model_axis=1).shape == (2, 1)
+    assert plan_mesh(1, model_axis=1).shape == (1, 1)
+
+
+def test_plan_mesh_prefer_pods_divides_before_rounding():
+    cfg = plan_mesh(96, model_axis=16, prefer_pods=2)        # 48 per pod
+    assert cfg.shape == (2, 2, 16) and cfg.axes == ("pod", "data", "model")
+    cfg = plan_mesh(64, model_axis=16, prefer_pods=4)        # 16 per pod
+    assert cfg.shape == (4, 1, 16)
+
+
+def test_plan_mesh_rejects_too_few_devices():
+    with pytest.raises(ValueError, match="< model axis"):
+        plan_mesh(8, model_axis=16)
+    with pytest.raises(ValueError, match="< model axis"):
+        rebuild_mesh([object()] * 2, model_axis=4)
+
+
+def test_split_devices_partitions_or_shares():
+    devs = [f"d{i}" for i in range(8)]
+    groups = split_devices(2, devs)
+    assert groups == [devs[:4], devs[4:]]                    # disjoint halves
+    groups = split_devices(3, devs)                          # 8//3=2 each
+    assert [len(g) for g in groups] == [2, 2, 2]             # 2 idle
+    assert len({d for g in groups for d in g}) == 6
+    # degenerate single-host case: too few devices -> every group gets
+    # the FULL list (replicas share silicon, keep separate schedulers)
+    groups = split_devices(4, devs[:2], min_per_group=1)
+    assert groups == [devs[:2]] * 4
+    groups = split_devices(2, devs, min_per_group=8)
+    assert groups == [devs] * 2
+    with pytest.raises(ValueError, match=">= 1"):
+        split_devices(0, devs)
+
+
+def test_carve_submeshes_one_mesh_per_replica():
+    meshes = carve_submeshes(2, model_axis=1)
+    assert len(meshes) == 2
+    for m in meshes:
+        assert "model" in m.axis_names and "data" in m.axis_names
 
 
 # ---------------------------------------------------------------------------

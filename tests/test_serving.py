@@ -231,6 +231,106 @@ def test_answer_future_timeout():
     assert fut.done() and fut.result() == 41
 
 
+def test_answer_future_first_wins_and_callbacks():
+    """First resolution wins; later set_result/set_exception are ignored
+    (what makes the router's kill-vs-complete race benign). Callbacks
+    fire exactly once, immediately when already done."""
+    fut = AnswerFuture()
+    seen = []
+    fut.add_done_callback(lambda f: seen.append(f.result(0)))
+    assert fut.set_result(1) is True
+    assert fut.set_result(2) is False            # ignored
+    assert fut.set_exception(RuntimeError("late")) is False
+    assert fut.result(0) == 1 and fut.exception() is None
+    assert seen == [1]
+    fut.add_done_callback(lambda f: seen.append(f.result(0)))
+    assert seen == [1, 1]                        # immediate on a done future
+    # exception-first symmetric case
+    bad = AnswerFuture()
+    bad.set_exception(RuntimeError("dead"))
+    assert bad.set_result(3) is False
+    assert isinstance(bad.exception(), RuntimeError)
+
+
+def test_queue_depth_counts_pending_queued_and_inflight():
+    sched, _ = make_fake_scheduler(buckets=(2, 4))
+    assert sched.queue_depth == 0
+    for i in range(5):                           # 4 cut into a lane, 1 pending
+        sched.submit(i)
+    assert sched.queue_depth == 5                # pad slots excluded
+    sched.pump()
+    assert sched.queue_depth == 0
+
+
+def test_drain_handoff_moves_undispatched_futures():
+    """Graceful leave: queued + pending pairs come back FIFO with their
+    ORIGINAL futures; resubmitting them under future= on another
+    scheduler resolves the same handles the clients already hold."""
+    src, _ = make_fake_scheduler(buckets=(2, 4))
+    futs = [src.submit(i) for i in range(5)]     # batch of 4 + 1 pending
+    pairs = src.drain_handoff()
+    assert [item for item, _ in pairs] == [0, 1, 2, 3, 4]   # FIFO
+    assert [f for _, f in pairs] == futs                    # same handles
+    with pytest.raises(RuntimeError, match="stop"):
+        src.submit(9)                            # intake closed
+    assert src.pump() == 0                       # nothing left behind
+    dst, _ = make_fake_scheduler(buckets=(2, 4))
+    for item, fut in pairs:
+        assert dst.submit(item, future=fut) is fut
+    dst.pump()
+    assert [f.result(0) for f in futs] == [0, 2, 4, 6, 8]
+
+
+def test_kill_fails_all_outstanding_first_wins():
+    sched, _ = make_fake_scheduler(buckets=(2, 4))
+    futs = [sched.submit(i) for i in range(5)]
+    done_early = futs[0]
+    done_early.set_result("beat the kill")       # completes before the kill
+    sched.kill(RuntimeError("replica lost"))
+    for f in futs[1:]:
+        assert f.done()
+        with pytest.raises(RuntimeError, match="replica lost"):
+            f.result(0)
+    assert done_early.result(0) == "beat the kill"   # first-wins preserved
+    with pytest.raises(RuntimeError, match="stop"):
+        sched.submit(9)
+
+
+def test_kill_aborts_running_session_and_resolves_everything():
+    sched, _ = make_fake_scheduler(buckets=(2,), max_wait_s=60.0)
+    sched.start()
+    try:
+        futs = [sched.submit(i) for i in range(3)]   # 1 batch + 1 pending
+        sched.kill(RuntimeError("injected fault"))
+        for f in futs:
+            with pytest.raises(RuntimeError, match="injected fault"):
+                f.result(timeout=30.0)
+        deadline = time.monotonic() + 30.0
+        while sched.running and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert not sched.running                 # loop aborted, not hung
+    finally:
+        sched.stop()
+
+
+def test_scheduler_heartbeat_fires_per_pump_and_loop():
+    beats = []
+    sched, _ = make_fake_scheduler(buckets=(2,), heartbeat=lambda:
+                                   beats.append(1))
+    sched.submit(0), sched.submit(1)
+    sched.pump()
+    assert len(beats) >= 1                       # pump beats
+    n = len(beats)
+    sched.start()
+    try:
+        fut = sched.submit(2)
+        sched.submit(3)
+        fut.result(timeout=30.0)
+    finally:
+        sched.stop()
+    assert len(beats) > n                        # session loop beats too
+
+
 def test_pad_keys_replicates_last_key():
     k0, _ = dpf.gen_keys(np.random.default_rng(0), 3, 5)
     batch = dpf.stack_keys([k0, k0])

@@ -1,0 +1,183 @@
+"""Chaos-plane cost model: verified-reconstruction overhead + recovery.
+
+Two questions this bench answers with numbers (DESIGN.md §12):
+
+* **What does integrity cost when nothing is wrong?** The checksummed
+  config stores one extra u32 per row (+12.5% GEMM width at 32-byte
+  records) and runs ``verify_records`` host-side per reconstructed
+  batch. We serve the same offered load through ``SingleServerPIR`` on
+  the plain (``pir-smoke-repl``) and checksummed (``pir-smoke-chk``)
+  LWE configs and report the steady-state QPS delta — the acceptance
+  budget is ≤15% overhead.
+
+* **What does a detected fault cost when something IS wrong?** Recovery
+  latency: a 2-replica fleet with a seeded :class:`ChaosInjector`, both
+  replicas pre-warmed (compiles excluded), then a pinned session offers
+  a load that trips the fault on its first batch. The wall from submit
+  to every-answer-byte-correct covers detection (``InjectedFault`` /
+  ``IntegrityError``), quarantine, and resubmission on the survivor.
+
+All rows are ``measured-cpu`` wall clock on this container (one core:
+the two replicas time-slice, so recovery walls are upper bounds for
+disjoint-lane deployments).
+
+Run: PYTHONPATH=src python -m benchmarks.run --only chaos
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Csv, record_json
+from repro.chaos import ChaosInjector, FaultEvent, FaultPlan
+from repro.configs.pir import PIR_SMOKE_CHK, PIR_SMOKE_REPL
+from repro.core import pir
+from repro.launch.mesh import make_local_mesh
+from repro.replica import metrics as fleet_metrics
+from repro.runtime.serve_loop import SingleServerPIR
+
+N_QUERIES = 64                  # offered load per steady-state rep
+BUCKET = 8
+REPS = 3
+OUT_JSON = "BENCH_chaos.json"
+SCHEMA = 1
+OVERHEAD_BUDGET = 0.15          # acceptance: verify costs <= 15% QPS
+
+
+# ---------------------------------------------------------------------------
+# steady state: verified reconstruction on the healthy path
+# ---------------------------------------------------------------------------
+
+def _steady_qps(cfg):
+    """Median steady-state QPS of one SingleServerPIR at ``cfg``; every
+    answer is checked against the plaintext oracle (a benchmark that
+    returns wrong bytes fast would be measuring the wrong thing)."""
+    db_host = pir.make_database(np.random.default_rng(0), cfg.n_items,
+                                cfg.item_bytes)
+    oracle = pir.db_as_bytes(db_host)
+    idx = np.random.default_rng(1).integers(
+        0, cfg.n_items, size=N_QUERIES).tolist()
+    system = SingleServerPIR(db_host, cfg, make_local_mesh(),
+                             n_queries=BUCKET, buckets=(BUCKET,))
+    try:
+        system.query(idx[:BUCKET])           # warm: compile + hint fetch
+        walls = []
+        for _ in range(REPS):
+            t0 = time.perf_counter()
+            recs = system.query(idx)
+            walls.append(time.perf_counter() - t0)
+        for i, rec in zip(idx, recs):
+            assert np.array_equal(np.asarray(rec), oracle[i]), \
+                f"D[{i}] wrong on the healthy path"
+        wall = float(np.median(walls))
+        return wall, N_QUERIES / wall
+    finally:
+        system.close()
+
+
+# ---------------------------------------------------------------------------
+# faulted state: detection -> quarantine -> resubmit, compiles excluded
+# ---------------------------------------------------------------------------
+
+def _recovery_point(action):
+    """Wall from submit to every-answer-correct with a seeded fault on
+    the pinned replica's FIRST post-warm batch. Both replicas serve one
+    warm batch first (``at=1`` windows skip it), so the wall measures
+    the failover machinery, not XLA compiles."""
+    from repro.chaos.smoke import _fleet, _teardown
+
+    if action == "corrupt":
+        cfg = PIR_SMOKE_CHK
+        plan = FaultPlan(seed=11, events=(
+            FaultEvent(seam="replica.serve_step", action="corrupt",
+                       target="r0", at=1),))
+    else:
+        cfg = PIR_SMOKE_REPL
+        plan = FaultPlan(seed=7, events=(
+            FaultEvent(seam="scheduler.dispatch", action="kill",
+                       target="r0", at=1),))
+    injector = ChaosInjector(plan)
+    router, oracle = _fleet(cfg, injector, np.random.default_rng(0))
+    try:
+        for rid in ("r0", "r1"):             # warm both lanes (visit 0)
+            warm = router.session(f"warm-{rid}")
+            warm.replica = rid
+            for f in [router.submit(i, session=warm) for i in (1, 2, 3, 4)]:
+                f.result()
+        victim = router.session("victim")
+        victim.replica = "r0"
+        idx = [5, 99, 1234, cfg.n_items - 1, 17, 2048, 0, 7]
+        t0 = time.perf_counter()
+        futs = [router.submit(i, session=victim, deadline_s=600.0)
+                for i in idx]
+        for i, f in zip(idx, futs):
+            assert np.array_equal(np.asarray(f.result()), oracle[i]), \
+                f"D[{i}] wrong after {action} recovery"
+        wall = time.perf_counter() - t0
+        assert action in injector.fired_actions(), \
+            f"planned {action} never fired"
+        snap = fleet_metrics.snapshot(router)
+        return wall, len(idx), snap
+    finally:
+        _teardown(router)
+
+
+def run() -> Csv:
+    csv = Csv(["mode", "config", "queries", "wall_s", "qps",
+               "overhead_pct", "failovers", "integrity_failures", "label"])
+
+    # --- steady state: plain vs checksummed ------------------------------
+    wall_off, qps_off = _steady_qps(PIR_SMOKE_REPL)
+    wall_on, qps_on = _steady_qps(PIR_SMOKE_CHK)
+    overhead = 1.0 - qps_on / qps_off
+    csv.add("verify-off", "pir-smoke-repl", N_QUERIES, wall_off, qps_off,
+            0.0, 0, 0, "measured-cpu")
+    csv.add("verify-on", "pir-smoke-chk", N_QUERIES, wall_on, qps_on,
+            overhead * 100.0, 0, 0, "measured-cpu")
+
+    # --- recovery: kill and corrupt, warmed fleets -----------------------
+    recovery = {}
+    for action in ("kill", "corrupt"):
+        wall, n, snap = _recovery_point(action)
+        recovery[action] = {
+            "queries_in_flight": n,
+            "recovery_s": wall,
+            "failovers": snap["router"]["failovers"],
+            "integrity_failures": snap["router"]["integrity_failures"],
+            "zero_lost": True,               # every future resolved
+        }
+        csv.add(f"recovery-{action}",
+                "pir-smoke-chk" if action == "corrupt" else "pir-smoke-repl",
+                n, wall, n / wall, 0.0, snap["router"]["failovers"],
+                snap["router"]["integrity_failures"], "measured-cpu")
+
+    record_json(OUT_JSON, {
+        "bench": "chaos", "schema": SCHEMA,
+        "n_items": PIR_SMOKE_REPL.n_items,
+        "item_bytes": PIR_SMOKE_REPL.item_bytes,
+        "protocol": PIR_SMOKE_REPL.protocol, "bucket": BUCKET,
+        "offered_queries": N_QUERIES, "reps": REPS,
+        "verify": {
+            "qps_plain": qps_off, "qps_checksummed": qps_on,
+            "overhead_frac": overhead,
+            "stored_row_growth_frac":
+                4.0 / PIR_SMOKE_REPL.item_bytes,    # +1 u32 per row
+        },
+        "recovery": recovery,
+        "acceptance": {
+            "verify_overhead_frac": overhead,
+            "budget_frac": OVERHEAD_BUDGET,
+            "within_budget": bool(overhead <= OVERHEAD_BUDGET),
+            "note": ("steady-state QPS delta of the checksummed LWE "
+                     "config vs plain at identical offered load; "
+                     "recovery walls exclude XLA compiles (both lanes "
+                     "pre-warmed) and cover detection + quarantine + "
+                     "resubmission on one time-sliced CPU core"),
+        },
+    })
+    return csv
+
+
+if __name__ == "__main__":
+    print(run().dump())

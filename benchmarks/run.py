@@ -17,7 +17,8 @@ import sys
 import time
 
 BENCHES = ["fig3", "fig9", "fig10_table1", "fig11", "fig12", "kernels",
-           "serving", "protocols", "db_updates", "autotune", "replicas"]
+           "serving", "protocols", "db_updates", "autotune", "replicas",
+           "chaos"]
 
 #: bench -> (artifact file, keys every readable record must carry).
 #: A registered bench without a row here produces no persisted artifact.
@@ -29,6 +30,9 @@ ARTIFACTS = {
     "replicas": ("BENCH_replicas.json",
                  ("bench", "label", "schema", "sweep", "failover",
                   "acceptance")),
+    "chaos": ("BENCH_chaos.json",
+              ("bench", "label", "schema", "verify", "recovery",
+               "acceptance")),
 }
 
 

@@ -34,3 +34,8 @@ python examples/replicas.py
 # per kernel, nothing persisted) + the heuristic-fallback gate — asserts
 # an empty plan cache resolves to exactly the pre-engine plan_for choices
 python -m repro.engine --smoke
+# chaos-plane smoke: seeded kill + share-corruption scenarios on the
+# 2-replica LWE fleet — asserts detection (InjectedFault / IntegrityError,
+# never a silently wrong record) AND recovery (every answer byte-correct
+# on the survivor after failover; 4 cheap LWE compiles total)
+python -m repro.chaos --smoke

@@ -1,0 +1,219 @@
+"""The chaos plane (DESIGN.md §12): deterministic, replayable fault injection.
+
+A ``FaultPlan`` is a *seeded schedule* of ``FaultEvent``s; a
+``ChaosInjector`` executes it against named **seams** — fixed hook points
+the serve stack consults when (and only when) an injector is wired in:
+
+==================== ======================================================
+seam                 where it fires
+==================== ======================================================
+scheduler.dispatch   ``QueryScheduler._launch``, before a batch dispatches
+replica.serve_step   the facade dispatch closure, on the answer shares
+router.resubmit      ``Router._dispatch`` on failover/hedge resubmits
+db.publish           ``ShardedDatabase.publish`` / ``Router.publish`` fan-out
+heartbeat            the registry-wired heartbeat delivery
+plan_cache.load      ``engine.cache.PlanCache`` disk load
+==================== ======================================================
+
+Actions: ``corrupt`` (flip bits in one answer share), ``kill`` (raise
+:class:`InjectedFault` at the seam), ``stall``/``delay`` (sleep
+``duration_s``), ``drop`` (suppress the seam's effect — a heartbeat, a
+publish fan-out, a cache load). Matching is by visit count: the injector
+keeps a per-``(seam, target)`` counter and an event fires on visits
+``[at, at + count)``. Everything derives from the plan's single seed —
+replaying the same plan against the same workload reproduces the same
+failure scenario bit-for-bit, which is what makes the chaos property
+tests and the ``python -m repro.chaos --smoke`` scenarios debuggable.
+
+The injector is *passive*: code paths that were never handed one pay a
+single ``is None`` check. No repro module imports are needed here, so any
+plane can depend on chaos without cycles.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["ACTIONS", "SEAMS", "ChaosInjector", "FaultEvent", "FaultPlan",
+           "InjectedFault"]
+
+#: the named hook points (see module docstring / DESIGN.md §12)
+SEAMS = ("scheduler.dispatch", "replica.serve_step", "router.resubmit",
+         "db.publish", "heartbeat", "plan_cache.load")
+
+#: what an event does when it fires
+ACTIONS = ("corrupt", "kill", "stall", "drop", "delay")
+
+
+class InjectedFault(RuntimeError):
+    """A chaos-injected failure (the ``kill`` action). Deliberately a
+    ``RuntimeError`` so it rides the same retry/failover paths a real
+    replica crash would."""
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.
+
+    seam        which hook point (one of :data:`SEAMS`)
+    action      one of :data:`ACTIONS`
+    target      scope id (replica id, subscriber id, ...); ``None``
+                matches any target at that seam
+    at          0-based visit count of (seam, target) at which it fires
+    count       fires for this many consecutive visits (drop N heartbeats)
+    duration_s  sleep length for ``stall``/``delay``
+    """
+    seam: str
+    action: str
+    target: Optional[str] = None
+    at: int = 0
+    count: int = 1
+    duration_s: float = 0.0
+
+    def __post_init__(self):
+        if self.seam not in SEAMS:
+            raise ValueError(f"unknown seam {self.seam!r}; known: {SEAMS}")
+        if self.action not in ACTIONS:
+            raise ValueError(
+                f"unknown action {self.action!r}; known: {ACTIONS}")
+        if self.at < 0 or self.count < 1 or self.duration_s < 0:
+            raise ValueError(f"degenerate fault event: {self}")
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, immutable fault schedule — the unit of replay.
+
+    The seed drives both :meth:`random` (which events exist) and the
+    injector's corruption randomness (which bits flip), so a plan value
+    fully determines the failure scenario.
+    """
+    seed: int
+    events: Tuple[FaultEvent, ...] = ()
+
+    @classmethod
+    def random(cls, seed: int, *,
+               targets: Sequence[Optional[str]] = (None,),
+               seams: Sequence[str] = ("replica.serve_step", "heartbeat",
+                                       "scheduler.dispatch"),
+               actions: Sequence[str] = ("corrupt", "kill", "drop"),
+               n_events: int = 4, max_at: int = 8) -> "FaultPlan":
+        """Draw a reproducible plan: same arguments -> same schedule."""
+        rng = np.random.default_rng(seed)
+        events = []
+        for _ in range(int(n_events)):
+            seam = seams[int(rng.integers(len(seams)))]
+            action = actions[int(rng.integers(len(actions)))]
+            if action == "corrupt":
+                seam = "replica.serve_step"   # the only share-bearing seam
+            elif action == "drop":
+                seam = "heartbeat" if seam == "replica.serve_step" else seam
+            target = targets[int(rng.integers(len(targets)))]
+            events.append(FaultEvent(
+                seam=seam, action=action, target=target,
+                at=int(rng.integers(max_at))))
+        return cls(seed=seed, events=tuple(events))
+
+
+@dataclass
+class _Fired:
+    """One log entry: what fired, where, on which visit."""
+    seam: str
+    target: Optional[str]
+    action: str
+    visit: int
+
+
+class ChaosInjector:
+    """Executes a :class:`FaultPlan` at the serve stack's chaos seams.
+
+    Thread-safe enough for the serve stack's usage (counters are bumped
+    under the GIL from short critical paths); determinism comes from the
+    per-(seam, target) visit counters — concurrency across *different*
+    targets cannot reorder a target's own schedule.
+    """
+
+    def __init__(self, plan: FaultPlan, *,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.plan = plan
+        self.sleep = sleep
+        self.rng = np.random.default_rng(plan.seed)
+        self._counts: dict = {}
+        self.fired: List[_Fired] = []
+
+    # -- core matching --------------------------------------------------
+
+    def fire(self, seam: str, target: Optional[str] = None
+             ) -> Tuple[FaultEvent, ...]:
+        """Consume one visit of ``(seam, target)`` and return the events
+        that fire on it (logged in :attr:`fired`); sleeps out any
+        ``stall``/``delay`` durations. Interpretation of ``kill`` /
+        ``drop`` / ``corrupt`` is the caller's (or a helper's) job."""
+        key = (seam, target)
+        n = self._counts.get(key, 0)
+        self._counts[key] = n + 1
+        hits = tuple(
+            ev for ev in self.plan.events
+            if ev.seam == seam
+            and (ev.target is None or ev.target == target)
+            and ev.at <= n < ev.at + ev.count)
+        for ev in hits:
+            self.fired.append(_Fired(seam, target, ev.action, n))
+            if ev.action in ("stall", "delay") and ev.duration_s > 0:
+                self.sleep(ev.duration_s)
+        return hits
+
+    # -- seam helpers ----------------------------------------------------
+
+    def visit(self, seam: str, target: Optional[str] = None
+              ) -> Tuple[FaultEvent, ...]:
+        """``fire`` + raise :class:`InjectedFault` on a ``kill`` event —
+        the default hook for seams whose only hard failure is a crash."""
+        hits = self.fire(seam, target)
+        for ev in hits:
+            if ev.action == "kill":
+                raise InjectedFault(
+                    f"chaos kill at {seam}"
+                    f"{'' if target is None else ':' + str(target)}")
+        return hits
+
+    def should_drop(self, seam: str, target: Optional[str] = None) -> bool:
+        """``fire`` + report whether the seam's effect should be
+        suppressed this visit (heartbeat delivery, publish fan-out)."""
+        return any(ev.action == "drop" for ev in self.fire(seam, target))
+
+    def corrupt_shares(self, seam: str, target: Optional[str], shares):
+        """``visit`` + on a ``corrupt`` event, flip bits in one share.
+
+        The corruption XORs one element of one share with the
+        repeated-byte mask ``0x80...80`` (top bit of every byte). That
+        choice is deliberate — it is detectable under *every* registered
+        share algebra: it flips payload bits under XOR folding, shifts a
+        byte by 128 mod 256 under additive Z_256 shares, and shifts an
+        LWE answer's residual by ~Delta/2 (never a clean multiple of
+        Delta, which would alias to a valid plaintext). Which share and
+        which element are drawn from the plan's seeded RNG.
+        """
+        hits = self.visit(seam, target)
+        if not any(ev.action == "corrupt" for ev in hits):
+            return shares
+        out = list(shares)
+        k = int(self.rng.integers(len(out)))
+        arr = np.array(np.asarray(out[k]))          # host copy, mutable
+        flat = arr.reshape(-1)
+        pos = int(self.rng.integers(flat.size))
+        u = flat.view(np.dtype(f"u{arr.dtype.itemsize}"))
+        mask = int.from_bytes(b"\x80" * arr.dtype.itemsize, "little")
+        u[pos] ^= np.asarray(mask, u.dtype)
+        out[k] = arr
+        return tuple(out)
+
+    # -- introspection ---------------------------------------------------
+
+    def fired_actions(self, seam: Optional[str] = None) -> List[str]:
+        """Actions that fired (optionally at one seam), in order."""
+        return [f.action for f in self.fired
+                if seam is None or f.seam == seam]

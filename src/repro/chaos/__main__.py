@@ -1,0 +1,22 @@
+"""CLI: ``python -m repro.chaos --smoke`` runs the seeded fault
+scenarios (kill + share corruption) against the real serve stack."""
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.chaos",
+        description="chaos-plane smoke scenarios (repro/chaos/smoke.py)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the seeded kill + corruption scenarios")
+    args = ap.parse_args(argv)
+    if not args.smoke:
+        ap.error("nothing to do (pass --smoke)")
+    from repro.chaos.smoke import main as smoke_main
+    return smoke_main()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -265,6 +265,11 @@ class PIRConfig:
     batch_queries: int = 32        # concurrent queries per step
     prf: str = "chacha12"          # chacha12 | chacha8 (pluggable ARX PRG)
     fused_kernel: bool = False     # fused GGM-expand + dpXOR (beyond paper)
+    # verified reconstruction: store a per-row u32 checksum column next to
+    # the payload so reconstruct() can detect corrupted shares and raise
+    # IntegrityError instead of returning garbage (DESIGN.md §12). Widens
+    # every stored record by 4 bytes; item_bytes stays the *logical* width.
+    checksum: bool = False
 
     def __post_init__(self):
         mode, proto = self.mode, self.protocol

@@ -59,6 +59,12 @@ PIR_SMOKE_LWE = PIRConfig(n_items=1 << 14, item_bytes=32,
 PIR_SMOKE_REPL = PIRConfig(n_items=1 << 12, item_bytes=32,
                            protocol="lwe-simple-1", n_servers=1,
                            batch_queries=4)
+# verified-reconstruction smoke (python -m repro.chaos --smoke,
+# benchmarks/bench_chaos.py): replica scale + the per-row checksum column,
+# so chaos-corrupted shares surface as IntegrityError instead of garbage
+PIR_SMOKE_CHK = PIRConfig(n_items=1 << 12, item_bytes=32,
+                          protocol="lwe-simple-1", n_servers=1,
+                          batch_queries=4, checksum=True)
 
 PIR_CONFIGS = {
     "pir-512m": PIR_512M,
@@ -75,4 +81,5 @@ PIR_CONFIGS = {
     "pir-smoke-upd": PIR_SMOKE_UPD,
     "pir-smoke-lwe": PIR_SMOKE_LWE,
     "pir-smoke-repl": PIR_SMOKE_REPL,
+    "pir-smoke-chk": PIR_SMOKE_CHK,
 }

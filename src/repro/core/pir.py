@@ -39,17 +39,26 @@ U32 = jnp.uint32
 # Database
 # ---------------------------------------------------------------------------
 
-def make_database(rng: np.random.Generator, n_items: int, item_bytes: int = 32
-                  ) -> np.ndarray:
+def make_database(rng: np.random.Generator, n_items: int, item_bytes: int = 32,
+                  *, checksum: bool = False) -> np.ndarray:
     """Random PIR DB of ``n_items`` records, each ``item_bytes`` long.
 
     Mirrors the paper's evaluation DB (random 32-byte/256-bit hashes, §5.2).
-    Stored as uint32 words: ``[N, item_bytes // 4]``.
+    Stored as uint32 words: ``[N, item_bytes // 4]``. ``checksum=True``
+    appends the verified-reconstruction checksum column (one u32 per row,
+    ``repro.db.spec.row_checksum``) — the *stored* layout checksummed
+    configs serve from; eager tests and oracles use it to build share
+    inputs that match what the serve stack holds.
     """
     if item_bytes % 4:
         raise ValueError("item_bytes must be a multiple of 4")
-    return rng.integers(0, 1 << 32, size=(n_items, item_bytes // 4),
-                        dtype=np.uint32)
+    words = rng.integers(0, 1 << 32, size=(n_items, item_bytes // 4),
+                         dtype=np.uint32)
+    if checksum:
+        from repro.db.spec import row_checksum
+        words = np.concatenate(
+            [words, row_checksum(words)[:, None]], axis=1)
+    return words
 
 
 def db_as_bytes(db_words: np.ndarray) -> np.ndarray:

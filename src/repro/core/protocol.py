@@ -57,6 +57,7 @@ from repro.config import PIRConfig
 from repro.core import dpf
 from repro.core.pir import answer_additive_matmul, dpxor, xor_fold
 from repro.crypto.chacha import PRG_ROUNDS
+from repro.db.spec import IntegrityError, verify_records
 
 U32 = jnp.uint32
 
@@ -236,9 +237,29 @@ class PIRProtocol:
 
         The general client-side entry point: stateless protocols ignore
         ``states``/``hint`` and defer to :meth:`reconstruct`; hint
-        protocols require both.
+        protocols require both. When the config enables verified
+        reconstruction (``cfg.checksum``), the combined records are routed
+        through :meth:`verify_reconstruction` — a corrupted answer share
+        raises :class:`~repro.db.spec.IntegrityError` here instead of
+        decoding to silent garbage (DESIGN.md §12).
         """
-        return self.reconstruct(answers)
+        rec = self.reconstruct(answers)
+        if cfg is not None and getattr(cfg, "checksum", False):
+            rec = self.verify_reconstruction(rec, cfg)
+        return rec
+
+    def verify_reconstruction(self, rec, cfg: PIRConfig) -> np.ndarray:
+        """Check reconstructed stored-width records against their per-row
+        checksum column and strip it, returning the logical payload.
+
+        Works for every share algebra because the check runs on the
+        *reconstructed* records, not the shares: XOR schemes hand in
+        ``[Q, item_words+1]`` u32 rows, byte schemes (additive, LWE)
+        ``[Q, item_bytes+4]`` byte rows with the checksum word little-
+        endian in the trailing 4 bytes. Raises ``IntegrityError`` naming
+        the offending batch indices on any mismatch.
+        """
+        return verify_records(np.asarray(rec), cfg.item_bytes)
 
     def record_struct(self, cfg: PIRConfig) -> Tuple[Tuple[int, ...], type]:
         """(shape tail, dtype) of one reconstructed record — XOR schemes
@@ -696,11 +717,16 @@ class LweSimple1(PIRProtocol):
         max_err = int(np.abs(err).max()) if err.size else 0
         bound = params.noise_bound(cfg.n_items)
         if max_err >= bound:
-            raise RuntimeError(
+            raise IntegrityError(
                 f"LWE noise overflow: recovered |e^T.D| = {max_err} >= "
                 f"tail bound {bound:.4g} (budget q/(2p) = "
                 f"{params.noise_budget}); the answers do not match this "
                 f"hint/epoch — reconstruction is not trustworthy")
+        if getattr(cfg, "checksum", False):
+            # the noise check alone cannot catch a corruption that shifts
+            # an answer by a multiple of Delta (it aliases to a clean
+            # plaintext shift); the row checksum closes that gap
+            records = self.verify_reconstruction(records, cfg)
         return jnp.asarray(records)
 
     def record_struct(self, cfg: PIRConfig):

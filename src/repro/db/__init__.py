@@ -6,8 +6,10 @@ online updates. Everything above (``core/server.py``,
 ``runtime/serve_loop.py``) consumes these instead of raw ``db_words``
 arrays.
 """
-from repro.db.spec import VIEWS, DatabaseSpec
+from repro.db.spec import (VIEWS, DatabaseSpec, IntegrityError, row_checksum,
+                           verify_records)
 from repro.db.sharded import PublishedDelta, ShardedDatabase, TransferStats
 
-__all__ = ["VIEWS", "DatabaseSpec", "PublishedDelta", "ShardedDatabase",
-           "TransferStats"]
+__all__ = ["VIEWS", "DatabaseSpec", "IntegrityError", "PublishedDelta",
+           "ShardedDatabase", "TransferStats", "row_checksum",
+           "verify_records"]

@@ -143,7 +143,16 @@ class ShardedDatabase:
         self._pack_cache: dict = {}
         self._hint_specs: Dict[str, _HintSpec] = {}
         self._subscribers: List = []   # publish fan-out callbacks
-        host = self.spec.validate_words(db_words)
+        #: optional ChaosInjector consulted at the "db.publish" seam
+        #: (fault injection is repro/chaos's job; None in production)
+        self.chaos = None
+        host = np.asarray(db_words)
+        if self.spec.checksum:
+            # accept logical-width payload rows; the checksum column is
+            # this plane's responsibility (attached once, host-side O(N),
+            # then maintained through publish() O(rows) deltas)
+            host = self.spec.attach_checksums(host)
+        host = self.spec.validate_words(host)
         self._current = _Epoch(epoch=0,
                                views={"words": self._place(host)})
         self._retired: Optional[_Epoch] = None
@@ -337,6 +346,11 @@ class ShardedDatabase:
             keep = np.sort(len(rows) - 1 - first_of_rev)
             rows, vals = rows[keep], vals[keep]
             rows_u, vals_u = rows, vals           # pre-padding references
+            # device paths (scatter + hint deltas) run at *stored* width;
+            # PublishedDelta.vals stays logical so replicas replaying the
+            # delta through stage() re-attach their own checksum column
+            vals_st_u = self.spec.attach_checksums(vals_u)
+            vals = vals_st_u
             # hint deltas need the deduplicated UNPADDED delta (a padded
             # duplicate would subtract its old row twice) and the old word
             # rows gathered from the pre-publish view, before the scatter
@@ -367,7 +381,7 @@ class ShardedDatabase:
             new_hints = {}
             for name, harr in delta_hints.items():
                 new_hints[name] = self._hint_specs[name].delta(
-                    harr, rows_u, old_words, jnp.asarray(vals_u))
+                    harr, rows_u, old_words, jnp.asarray(vals_st_u))
                 self.stats.n_hint_deltas += 1
             self._retired = self._current
             self._current = _Epoch(epoch=self._retired.epoch + 1,
@@ -378,6 +392,12 @@ class ShardedDatabase:
             self.published.append(delta)
             epoch = self._current.epoch
             subscribers = tuple(self._subscribers)
+        # chaos seam "db.publish": a drop swallows this epoch's fan-out
+        # (subscribers converge via the delta-log catch-up on the next
+        # publish); delay/stall events sleep before notification
+        chaos = self.chaos
+        if chaos is not None and chaos.should_drop("db.publish"):
+            return epoch
         for fn in subscribers:       # outside the lock (see subscribe())
             fn(delta)
         return epoch

@@ -12,6 +12,14 @@ and host/device packing conversions (``crypto/packing.py`` primitives).
 A view name is protocol metadata (``PIRProtocol.db_view``): the serve
 plumbing asks the spec for that view's shape/dtype/struct instead of
 branching on the share scheme.
+
+Verified reconstruction (DESIGN.md §12) adds an optional per-row checksum
+column: with ``checksum=True`` every stored record carries one extra u32
+word (``row_checksum`` of its payload words) packed after the payload, so
+all three views widen by 4 bytes per record while ``item_bytes`` remains
+the *logical* payload width the client sees. ``verify_records`` checks and
+strips that column at reconstruction time, raising :class:`IntegrityError`
+on mismatch — a corrupted share can no longer decode to silent garbage.
 """
 from __future__ import annotations
 
@@ -27,21 +35,110 @@ from repro.crypto.packing import (np_bytes_to_words, np_words_to_bytes,
 
 #: registered database views: name -> (dtype, bytes-per-record-column)
 VIEWS = {
-    "words": np.dtype(np.uint32),   # [N, item_bytes // 4] — XOR schemes
-    "bytes": np.dtype(np.int8),     # [N, item_bytes]      — additive GEMM
-    "bytes32": np.dtype(np.int32),  # [N, item_bytes]      — LWE GEMM
+    "words": np.dtype(np.uint32),   # [N, stored_words] — XOR schemes
+    "bytes": np.dtype(np.int8),     # [N, stored_bytes] — additive GEMM
+    "bytes32": np.dtype(np.int32),  # [N, stored_bytes] — LWE GEMM
     # bytes32 holds the same byte values 0..255 widened to int32: the LWE
     # contraction is mod-2^32 arithmetic, and the int8 view's reinterpreted
     # negatives (byte >= 128 -> byte - 256) would shift it by 256·k ≠ 0 mod q.
 }
 
 
+class IntegrityError(RuntimeError):
+    """A reconstructed record failed verification.
+
+    Raised instead of returning a silently wrong record when the stored
+    per-row checksum disagrees with the reconstructed payload (a corrupted
+    answer share, a byzantine party, bit rot) or, for the LWE protocol,
+    when the recovered noise exceeds the validated budget. ``bad_queries``
+    carries the batch-local indices of the offending queries so a router
+    can resubmit exactly those.
+    """
+
+    def __init__(self, msg: str, bad_queries=()):
+        super().__init__(msg)
+        self.bad_queries = tuple(int(i) for i in bad_queries)
+
+
+def row_checksum(words: np.ndarray) -> np.ndarray:
+    """Per-row u32 mixing checksum over payload words: [..., W] -> [...].
+
+    A murmur3-finalizer-style avalanche per word, folded left-to-right with
+    a position-dependent multiply-add so permuting words changes the sum.
+    Pure vectorized numpy over the leading axes (O(rows · W) host work —
+    the same order as the packing conversions that already run per
+    publish). This is an *integrity* check against corruption, not a MAC:
+    a malicious server that knows the scheme can forge it (DESIGN.md §12
+    spells out the trust-model delta).
+    """
+    w = np.asarray(words, dtype=np.uint64)
+    if w.ndim < 1 or w.shape[-1] == 0:
+        raise ValueError(f"need at least one payload word, got shape {w.shape}")
+    h = np.full(w.shape[:-1], 0x9E3779B9, dtype=np.uint64)
+    for k in range(w.shape[-1]):
+        x = (w[..., k] * np.uint64(0x85EBCA6B)) & np.uint64(0xFFFFFFFF)
+        x ^= x >> np.uint64(13)
+        x = (x * np.uint64(0xC2B2AE35)) & np.uint64(0xFFFFFFFF)
+        x ^= x >> np.uint64(16)
+        h = ((h ^ x) * np.uint64(0x9E3779B1) + np.uint64(k)) \
+            & np.uint64(0xFFFFFFFF)
+    return h.astype(np.uint32)
+
+
+def verify_records(rec: np.ndarray, item_bytes: int) -> np.ndarray:
+    """Check + strip the checksum column of reconstructed records.
+
+    Accepts either record form a protocol reconstructs into, both at
+    *stored* width (payload + checksum):
+
+    * words form  ``[Q, item_bytes//4 + 1]`` u32 — the XOR schemes;
+    * bytes form  ``[Q, item_bytes + 4]`` integer bytes 0..255 (little-
+      endian checksum word in the trailing 4 bytes) — additive / LWE.
+
+    Returns the payload (same form, checksum column stripped) or raises
+    :class:`IntegrityError` naming the offending batch indices.
+    """
+    arr = np.asarray(rec)
+    if arr.ndim != 2:
+        raise ValueError(f"records must be 2-D, got shape {arr.shape}")
+    n_words = item_bytes // 4
+    if arr.shape[1] == n_words + 1 and arr.dtype == np.uint32:
+        payload_words, stored = arr[:, :n_words], arr[:, n_words]
+        payload = payload_words
+    elif arr.shape[1] == item_bytes + 4:
+        b = (arr.astype(np.int64) & 0xFF).astype(np.uint8)
+        payload_words = np_bytes_to_words(b[:, :item_bytes])
+        stored = np_bytes_to_words(b[:, item_bytes:])[:, 0]
+        payload = arr[:, :item_bytes]
+    else:
+        raise ValueError(
+            f"records must be [Q, {n_words + 1}] u32 words or "
+            f"[Q, {item_bytes + 4}] bytes (stored width incl. checksum), "
+            f"got {arr.shape} {arr.dtype}")
+    bad = np.nonzero(row_checksum(payload_words) != stored)[0]
+    if bad.size:
+        raise IntegrityError(
+            f"checksum mismatch on {bad.size}/{arr.shape[0]} reconstructed "
+            f"record(s) (batch indices {bad[:8].tolist()}"
+            f"{'...' if bad.size > 8 else ''}): corrupted answer share",
+            bad_queries=bad)
+    return payload
+
+
 @dataclass(frozen=True)
 class DatabaseSpec:
-    """Shape/packing math for one PIR database (N records × L bytes)."""
+    """Shape/packing math for one PIR database (N records × L bytes).
+
+    ``item_bytes`` is the *logical* payload width; with ``checksum=True``
+    each stored record additionally carries one u32 ``row_checksum`` word
+    after the payload (``stored_bytes = item_bytes + 4``), and all views /
+    shapes are in stored width — verification strips the column again at
+    reconstruction.
+    """
 
     n_items: int
     item_bytes: int = 32
+    checksum: bool = False
 
     def __post_init__(self):
         if self.n_items <= 0 or self.n_items & (self.n_items - 1):
@@ -55,13 +152,23 @@ class DatabaseSpec:
 
     @classmethod
     def from_config(cls, cfg: PIRConfig) -> "DatabaseSpec":
-        return cls(n_items=cfg.n_items, item_bytes=cfg.item_bytes)
+        return cls(n_items=cfg.n_items, item_bytes=cfg.item_bytes,
+                   checksum=getattr(cfg, "checksum", False))
 
     # -- geometry -------------------------------------------------------
 
     @property
     def item_words(self) -> int:
         return self.item_bytes // 4
+
+    @property
+    def stored_bytes(self) -> int:
+        """Bytes per stored record (payload + optional checksum word)."""
+        return self.item_bytes + (4 if self.checksum else 0)
+
+    @property
+    def stored_words(self) -> int:
+        return self.item_words + (1 if self.checksum else 0)
 
     @property
     def log_n(self) -> int:
@@ -93,7 +200,7 @@ class DatabaseSpec:
 
     def view_shape(self, view: str) -> Tuple[int, int]:
         self.view_dtype(view)
-        cols = self.item_words if view == "words" else self.item_bytes
+        cols = self.stored_words if view == "words" else self.stored_bytes
         return (self.n_items, cols)
 
     def view_struct(self, view: str) -> jax.ShapeDtypeStruct:
@@ -110,6 +217,32 @@ class DatabaseSpec:
                 f"db_words must be {self.view_shape('words')} uint32, got "
                 f"{arr.shape} {arr.dtype}")
         return arr
+
+    def attach_checksums(self, words: np.ndarray) -> np.ndarray:
+        """Widen payload word rows to stored width: [R, W] -> [R, W+1].
+
+        No-op when ``checksum`` is off or the rows already carry the
+        column (idempotent — safe on replayed deltas). O(R) host work.
+        """
+        arr = np.asarray(words, dtype=np.uint32)
+        if not self.checksum or (arr.ndim == 2
+                                 and arr.shape[1] == self.stored_words):
+            return arr
+        if arr.ndim != 2 or arr.shape[1] != self.item_words:
+            raise ValueError(
+                f"payload rows must be [R, {self.item_words}] u32, got "
+                f"{arr.shape}")
+        col = row_checksum(arr)[:, None].astype(np.uint32)
+        return np.concatenate([arr, col], axis=1)
+
+    def verify_stored_rows(self, rows: np.ndarray) -> np.ndarray:
+        """Check stored-width word rows against their checksum column and
+        return the logical payload ([R, W+1] -> [R, W]); identity when
+        checksums are off. Raises :class:`IntegrityError` on mismatch."""
+        arr = np.asarray(rows, dtype=np.uint32)
+        if not self.checksum:
+            return arr
+        return verify_records(arr, self.item_bytes)
 
     def words_to_bytes_host(self, words: np.ndarray) -> np.ndarray:
         """[..., W] u32 -> [..., 4W] u8 on the host (little-endian)."""

@@ -55,8 +55,16 @@ def plan_key(backend: str, protocol: str, spec_sig: str, bucket: int) -> str:
 
 
 def spec_signature(cfg) -> str:
-    """DatabaseSpec signature of a PIRConfig (the cache's shape axes)."""
-    return f"{cfg.n_items}x{cfg.item_bytes}"
+    """DatabaseSpec signature of a PIRConfig (the cache's shape axes).
+
+    A checksum column widens every stored row by one word, changing the
+    shapes plan selection tunes against — checksummed configs get their
+    own cache rows (``"+c"`` marker) instead of poisoning the plain ones.
+    """
+    sig = f"{cfg.n_items}x{cfg.item_bytes}"
+    if getattr(cfg, "checksum", False):
+        sig += "+c"
+    return sig
 
 
 def plan_to_dict(plan) -> Dict:
@@ -84,16 +92,33 @@ class PlanCache:
     own against tmp paths.
     """
 
-    def __init__(self, path: Optional[str] = None):
+    def __init__(self, path: Optional[str] = None, *, chaos=None):
         self.path = path
         self.plans: Dict[str, Dict] = {}
         self.load_error: Optional[str] = None
+        #: optional ChaosInjector (repro.chaos) consulted at the
+        #: plan_cache.load seam — proves the degrade-to-heuristic
+        #: contract holds under injected load failures
+        self.chaos = chaos
         if path is not None:
             self._load(path)
 
     # -- persistence ----------------------------------------------------
 
     def _load(self, path: str) -> None:
+        if self.chaos is not None:
+            from repro.chaos import InjectedFault
+            try:
+                hits = self.chaos.visit("plan_cache.load")  # raises on kill
+                dropped = any(ev.action == "drop" for ev in hits)
+            except InjectedFault as e:
+                # same degrade path as a torn file: serving never dies
+                # because a tuning artifact is unreadable
+                self.load_error = f"{type(e).__name__}: {e}"
+                return
+            if dropped:
+                self.load_error = "InjectedFault: chaos drop at plan_cache.load"
+                return
         if not os.path.exists(path):
             return
         try:

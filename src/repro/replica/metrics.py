@@ -63,6 +63,9 @@ def snapshot(router) -> Dict:
             "answered": answered,
             "failovers": router.failovers,
             "resubmitted": router.resubmitted,
+            "integrity_failures": getattr(router, "integrity_failures", 0),
+            "hedges": getattr(router, "hedges", 0),
+            "deadline_expired": getattr(router, "deadline_expired", 0),
             "retry": {
                 "attempts": router.retry_stats.attempts,
                 "retried": router.retry_stats.retried,

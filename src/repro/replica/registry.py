@@ -29,6 +29,10 @@ class ReplicaRegistry:
                  clock: Callable[[], float] = time.monotonic):
         self.heartbeats = HeartbeatRegistry(timeout=timeout, clock=clock)
         self._failed: Set[str] = set()
+        #: optional ChaosInjector (repro.chaos) consulted at the
+        #: heartbeat seam — a dropped beat never reaches last_seen, so
+        #: the replica ages toward suspicion exactly like a wedged one
+        self.chaos = None
 
     # -- membership -------------------------------------------------------
 
@@ -60,6 +64,9 @@ class ReplicaRegistry:
         are dropped (a drained scheduler's last loop iterations must not
         resurrect the membership entry)."""
         if rid in self.heartbeats.last_seen:
+            if (self.chaos is not None
+                    and self.chaos.should_drop("heartbeat", rid)):
+                return
             self.heartbeats.beat(rid)
 
     def report_failure(self, rid: str) -> None:

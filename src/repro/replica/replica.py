@@ -67,6 +67,10 @@ class ServeReplica:
         if warm_plans:
             from repro import engine
             engine.record_plans(cfg, warm_plans)
+        if "chaos" in pir_kwargs:
+            # scope chaos events to this replica by default, so a plan
+            # targeting "r0" only corrupts/kills r0's serve path
+            pir_kwargs.setdefault("chaos_scope", replica_id)
         self.pir = make_pir(db_words, cfg, mesh, **pir_kwargs)
         self._lost: Optional[BaseException] = None
 
@@ -108,9 +112,10 @@ class ServeReplica:
 
     # -- serve ----------------------------------------------------------
 
-    def submit(self, index: int) -> AnswerFuture:
+    def submit(self, index: int, *,
+               deadline_s: Optional[float] = None) -> AnswerFuture:
         """Keygen + enqueue one private retrieval of ``db[index]``."""
-        return self.pir.submit(index)
+        return self.pir.submit(index, deadline_s=deadline_s)
 
     def resubmit(self, item: Any, future: AnswerFuture) -> AnswerFuture:
         """Re-enqueue an already-keygen'd payload under its existing

@@ -73,14 +73,26 @@ def retry_step(fn: Callable, *args, retries: int = 3, base_delay: float = 0.5,
                max_delay: float = 30.0,
                sleep: Callable[[float], None] = time.sleep,
                retriable=(RuntimeError, OSError),
-               stats: Optional[RetryStats] = None, **kwargs):
+               stats: Optional[RetryStats] = None,
+               jitter: float = 0.0,
+               rng: Optional[np.random.Generator] = None, **kwargs):
     """Run ``fn`` with exponential backoff on transient failures.
 
     The per-attempt delay doubles from ``base_delay`` but is capped at
     ``max_delay`` — unbounded growth turns a long outage into hour-scale
     sleeps that outlive the outage itself. Pass a :class:`RetryStats` to
     receive the attempt count (metrics surface it per failover).
+
+    ``jitter`` spreads retry storms: each delay is scaled by a uniform
+    factor in ``[1 - jitter, 1 + jitter]`` (then re-capped at
+    ``max_delay``). The factor comes from the *injectable* ``rng`` —
+    seeded callers get bit-identical backoff schedules across replays,
+    which the chaos plane relies on. ``jitter=0`` (default) keeps the
+    historical exact-power-of-two delays; ``stats.slept_s`` always
+    records the actual (jittered) sleep.
     """
+    if jitter and rng is None:
+        rng = np.random.default_rng()
     for attempt in range(retries + 1):
         if stats is not None:
             stats.attempts += 1
@@ -90,6 +102,9 @@ def retry_step(fn: Callable, *args, retries: int = 3, base_delay: float = 0.5,
             if attempt == retries:
                 raise
             delay = min(base_delay * (2 ** attempt), max_delay)
+            if jitter:
+                u = float(rng.uniform(-jitter, jitter))
+                delay = min(delay * (1.0 + u), max_delay)
             if stats is not None:
                 stats.retried += 1
                 stats.slept_s += delay

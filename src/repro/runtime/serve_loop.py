@@ -84,6 +84,42 @@ class ServeStats:
         return self.padded / slots if slots else 0.0
 
 
+class QueryTimeout(TimeoutError):
+    """``AnswerFuture.result`` ran out of time — with query context.
+
+    The message names everything known about the query (session id,
+    batch bucket, answer epoch, elapsed vs deadline) instead of a bare
+    "answer not ready", so a timeout in a fleet log is attributable
+    without a debugger. Still a ``TimeoutError``: existing handlers keep
+    working.
+    """
+
+    def __init__(self, fut: Optional["AnswerFuture"] = None,
+                 timeout: Optional[float] = None):
+        parts = []
+        if fut is not None:
+            now = time.monotonic()
+            ctx = getattr(fut, "context", {})
+            if ctx.get("session") is not None:
+                parts.append(f"session={ctx['session']}")
+            if ctx.get("replica") is not None:
+                parts.append(f"replica={ctx['replica']}")
+            if ctx.get("bucket") is not None:
+                parts.append(f"bucket={ctx['bucket']}")
+            if getattr(fut, "epoch", None) is not None:
+                parts.append(f"epoch={fut.epoch}")
+            created = getattr(fut, "created", None)
+            if created is not None:
+                parts.append(f"elapsed={now - created:.3f}s")
+            deadline = getattr(fut, "deadline", None)
+            if deadline is not None:
+                parts.append(f"deadline_over_by={now - deadline:+.3f}s")
+        if timeout is not None:
+            parts.append(f"timeout={timeout:.3f}s")
+        detail = f" ({', '.join(parts)})" if parts else ""
+        super().__init__(f"answer not ready{detail}")
+
+
 class AnswerFuture:
     """Per-query result handle: ``submit(index) -> future`` (DESIGN.md §6).
 
@@ -94,6 +130,13 @@ class AnswerFuture:
     otherwise) — clients of an online-updated DB read it to know which
     version their record reflects.
 
+    ``deadline`` is an absolute ``time.monotonic()`` instant (or ``None``
+    for no deadline): ``result()`` with no explicit timeout waits only
+    until it, raising :class:`QueryTimeout`, and the replica router's
+    reaper uses it to drive hedged resubmits (DESIGN.md §12.3).
+    ``context`` accumulates attribution breadcrumbs (session id, bucket,
+    routed replica) that the timeout message reports.
+
     Completion is **first-wins**: once resolved, later ``set_result`` /
     ``set_exception`` calls are ignored (they return ``False``). That is
     what makes a kill-vs-complete race benign — a replica being torn down
@@ -101,13 +144,16 @@ class AnswerFuture:
     exactly once (``replica/router.py`` failover relies on this).
     """
 
-    def __init__(self):
+    def __init__(self, *, deadline: Optional[float] = None):
         self._ev = threading.Event()
         self._lock = threading.Lock()
         self._value: Any = None
         self._exc: Optional[BaseException] = None
         self._callbacks: List[Callable[["AnswerFuture"], None]] = []
         self.epoch: Optional[int] = None
+        self.deadline = deadline
+        self.context: Dict[str, Any] = {}
+        self.created = time.monotonic()
 
     def _resolve(self, value: Any, exc: Optional[BaseException]) -> bool:
         with self._lock:
@@ -145,8 +191,10 @@ class AnswerFuture:
         return self._exc
 
     def result(self, timeout: Optional[float] = None) -> Any:
+        if timeout is None and self.deadline is not None:
+            timeout = max(self.deadline - time.monotonic(), 0.0)
         if not self._ev.wait(timeout):
-            raise TimeoutError("answer not ready")
+            raise QueryTimeout(self, timeout=timeout)
         if self._exc is not None:
             raise self._exc
         return self._value
@@ -212,6 +260,8 @@ class QueryScheduler:
         clock: Callable[[], float] = time.monotonic,
         epoch_of: Optional[Callable[[Any], Optional[int]]] = None,
         heartbeat: Optional[Callable[[], None]] = None,
+        chaos=None,
+        chaos_target: Optional[str] = None,
     ):
         self._collate = collate
         self._stage = stage
@@ -229,6 +279,12 @@ class QueryScheduler:
         #: session thread stops turning (killed, hung, or crashed). The
         #: replica plane assigns it at registry join.
         self.heartbeat = heartbeat
+        #: chaos seam "scheduler.dispatch" (repro/chaos): consulted once
+        #: per batch launch — a kill raises InjectedFault (failing the
+        #: batch + the session, like a real dispatch crash), stall/delay
+        #: sleep. None (production) costs one attribute check per launch.
+        self.chaos = chaos
+        self.chaos_target = chaos_target
         self.stats = ServeStats()
 
         self._cv = threading.Condition()
@@ -354,6 +410,8 @@ class QueryScheduler:
                        futures=[t[1] for t in taken],
                        cluster=lane)
         batch.bucket = self.bucket_for(n)
+        for fut in batch.futures:    # timeout-attribution breadcrumb
+            fut.context.setdefault("bucket", batch.bucket)
         self.queues[lane].append(batch)
 
     def _cut_ripe_locked(self) -> bool:
@@ -393,19 +451,32 @@ class QueryScheduler:
     # ------------------------------------------------------------------
 
     def _launch(self, batch: _Batch) -> Tuple[_Batch, Any, float]:
-        """Collate + stage + dispatch one batch (device runs async)."""
-        batch.payload = self._collate(batch.items)
-        batch.staged = self._stage(batch.payload)
-        t0 = self.clock()
-        raw = self._dispatch(batch.staged)
-        if self._epoch_of is not None:
-            # extracted from THIS batch's dispatch result: the dispatcher
-            # snapshots the DB atomically and threads the epoch it read
-            # through raw, so tag == data even across a concurrent
-            # publish or a second dispatching thread (the dispatched step
-            # holds the old epoch's immutable arrays and finishes against
-            # them)
-            batch.epoch = self._epoch_of(raw)
+        """Collate + stage + dispatch one batch (device runs async).
+
+        A failure anywhere in the launch path (including an injected
+        chaos kill) fails the batch's futures before propagating — the
+        batch has already left the lane queues, so nothing else would
+        ever resolve them.
+        """
+        try:
+            if self.chaos is not None:
+                self.chaos.visit("scheduler.dispatch", self.chaos_target)
+            batch.payload = self._collate(batch.items)
+            batch.staged = self._stage(batch.payload)
+            t0 = self.clock()
+            raw = self._dispatch(batch.staged)
+            if self._epoch_of is not None:
+                # extracted from THIS batch's dispatch result: the
+                # dispatcher snapshots the DB atomically and threads the
+                # epoch it read through raw, so tag == data even across a
+                # concurrent publish or a second dispatching thread (the
+                # dispatched step holds the old epoch's immutable arrays
+                # and finishes against them)
+                batch.epoch = self._epoch_of(raw)
+        except BaseException as e:
+            for fut in batch.futures:
+                fut.set_exception(e)
+            raise
         with self._cv:
             self._n_inflight += len(batch.items)
         return batch, raw, t0
@@ -677,7 +748,9 @@ class MultiServerPIR:
                  max_wait_s: float = DEFAULT_MAX_WAIT_S,
                  n_clusters: int = 1,
                  protocol: Optional[PIRProtocol] = None,
-                 client_rng: Optional[np.random.Generator] = None):
+                 client_rng: Optional[np.random.Generator] = None,
+                 default_deadline_s: Optional[float] = None,
+                 chaos=None, chaos_scope: Optional[str] = None):
         self.cfg = cfg
         self.protocol = (protocol if protocol is not None
                          else protocol_mod.for_config(cfg))
@@ -703,10 +776,24 @@ class MultiServerPIR:
         self.rng = (client_rng if client_rng is not None
                     else np.random.default_rng())
         self._lock = threading.Lock()
-        # first dispatch compiles one serve step per party (~1 min each on
-        # the dev container), so a cold background session needs the
-        # result deadline to scale with the party count
-        self._query_timeout_s = 120.0 * self.n_parties
+        # per-query deadline default (DESIGN.md §12.3): every submit()
+        # stamps an absolute deadline onto its AnswerFuture, which both
+        # result() and the replica router's hedging reaper read. The
+        # compile-aware default replaces the old hardcoded
+        # ``_query_timeout_s``: first dispatch compiles one serve step per
+        # party (~1 min each on the dev container), so a cold background
+        # session needs the deadline to scale with the party count.
+        self.default_deadline_s = (default_deadline_s
+                                   if default_deadline_s is not None
+                                   else 120.0 * self.n_parties)
+        #: chaos plane wiring (repro/chaos; None in production): the
+        #: injector is consulted at "scheduler.dispatch" (batch launch)
+        #: and "replica.serve_step" (the answer shares of each dispatch,
+        #: where the corrupt action flips bits). ``chaos_scope`` is this
+        #: deployment's target id — the replica plane passes its replica
+        #: id so plans can aim at one replica of a fleet.
+        self.chaos = chaos
+        self.chaos_scope = chaos_scope
         self.scheduler = self._make_scheduler(max_wait_s, n_clusters)
 
     def _make_scheduler(self, max_wait_s: float, n_clusters: int
@@ -715,6 +802,8 @@ class MultiServerPIR:
         proto = self.protocol
         parties = range(self.n_parties)
         db = self.db
+        cfg = self.cfg
+        chaos, chaos_scope = self.chaos, self.chaos_scope
 
         def collate(items):
             # items: per-query tuples of per-party keys -> per-party batches
@@ -731,19 +820,28 @@ class MultiServerPIR:
             # with the data read — even across concurrent dispatchers
             epoch, views = db.snapshot((proto.db_view,))
             view = views[proto.db_view]
-            return (tuple(servers[p].bucketed.answer(view, staged[p])
-                          for p in parties), epoch)
+            answers = tuple(servers[p].bucketed.answer(view, staged[p])
+                            for p in parties)
+            if chaos is not None:   # seam: corrupt one party's shares
+                answers = chaos.corrupt_shares("replica.serve_step",
+                                               chaos_scope, answers)
+            return answers, epoch
 
         def finalize(raw, n):
             answers, _ = raw
-            rec = np.asarray(proto.reconstruct([r[:n] for r in answers]))
+            # reconstruct_with routes through checksum verification when
+            # cfg.checksum — a corrupted share raises IntegrityError here
+            # (failing this batch's futures) instead of resolving garbage
+            rec = np.asarray(proto.reconstruct_with(
+                [r[:n] for r in answers], [None] * n, cfg=cfg))
             return list(rec)
 
         return QueryScheduler(
             collate=collate, stage=stage, dispatch=dispatch,
             finalize=finalize, buckets=servers[0].buckets,
             n_clusters=n_clusters, max_wait_s=max_wait_s,
-            epoch_of=lambda raw: raw[1])
+            epoch_of=lambda raw: raw[1],
+            chaos=chaos, chaos_target=chaos_scope)
 
     # -- streaming session API ------------------------------------------
 
@@ -761,13 +859,26 @@ class MultiServerPIR:
     def __exit__(self, *exc):
         self.close()
 
-    def submit(self, index: int) -> AnswerFuture:
+    def _deadline_future(self, deadline_s: Optional[float]) -> AnswerFuture:
+        """A fresh future carrying this query's absolute deadline."""
+        d = self.default_deadline_s if deadline_s is None else deadline_s
+        return AnswerFuture(
+            deadline=None if d is None else time.monotonic() + d)
+
+    def submit(self, index: int, *,
+               deadline_s: Optional[float] = None) -> AnswerFuture:
         """Private retrieval of ``db[index]``; resolves to one record
         (``[W]`` u32 words for the XOR protocols, bytes for additive).
-        The resolved future's ``epoch`` names the DB version answered."""
+        The resolved future's ``epoch`` names the DB version answered.
+
+        ``deadline_s`` (default: ``default_deadline_s``) becomes an
+        absolute deadline on the returned future: ``result()`` with no
+        explicit timeout waits only until it.
+        """
+        fut = self._deadline_future(deadline_s)
         with self._lock:     # client-side keygen shares one rng
             q = pir.query_gen(self.rng, index, self.cfg)
-        return self.scheduler.submit(q.keys)
+        return self.scheduler.submit(q.keys, future=fut)
 
     # -- online updates (public metadata; privacy model untouched) ------
 
@@ -807,8 +918,9 @@ class MultiServerPIR:
         futs = [self.submit(i) for i in indices]
         if not self.scheduler.running:
             self.scheduler.pump()
-        return np.stack([f.result(timeout=self._query_timeout_s)
-                         for f in futs])
+        # each future carries its own deadline (set at submit); result()
+        # derives the wait from it
+        return np.stack([f.result() for f in futs])
 
 
 class SingleServerPIR(MultiServerPIR):
@@ -875,6 +987,7 @@ class SingleServerPIR(MultiServerPIR):
         proto = self.protocol
         cfg = self.cfg
         db = self.db
+        chaos, chaos_scope = self.chaos, self.chaos_scope
         # server-side hint lifecycle: built lazily per epoch, delta-updated
         # on publish (db/sharded.py)
         db.register_hint(proto.name, proto.hint_builder(cfg),
@@ -894,6 +1007,9 @@ class SingleServerPIR(MultiServerPIR):
             keys, states = staged
             epoch, views = db.snapshot((proto.db_view,))
             ans = server.bucketed.answer(views[proto.db_view], keys)
+            if chaos is not None:   # seam: corrupt the answer matrix
+                (ans,) = chaos.corrupt_shares("replica.serve_step",
+                                              chaos_scope, (ans,))
             return ans, epoch, states
 
         def finalize(raw, n):
@@ -907,16 +1023,19 @@ class SingleServerPIR(MultiServerPIR):
             collate=collate, stage=stage, dispatch=dispatch,
             finalize=finalize, buckets=server.buckets,
             n_clusters=n_clusters, max_wait_s=max_wait_s,
-            epoch_of=lambda raw: raw[1])
+            epoch_of=lambda raw: raw[1],
+            chaos=chaos, chaos_target=chaos_scope)
 
-    def submit(self, index: int) -> AnswerFuture:
+    def submit(self, index: int, *,
+               deadline_s: Optional[float] = None) -> AnswerFuture:
         """Private retrieval of ``db[index]``; resolves to one record
         ([item_bytes] u8). The per-query LWE secret stays client-side:
         only the ciphertext enters the scheduler's device path."""
+        fut = self._deadline_future(deadline_s)
         with self._lock:     # client-side keygen shares one rng
             keys, state = self.protocol.query_gen_full(self.rng, index,
                                                        self.cfg)
-        return self.scheduler.submit((keys, state))
+        return self.scheduler.submit((keys, state), future=fut)
 
 
 class TwoServerPIR(MultiServerPIR):

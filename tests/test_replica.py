@@ -165,15 +165,25 @@ def test_round_trip_and_epoch_tag():
 
 def test_p2c_always_picks_the_shallower_of_two():
     """With exactly two eligible replicas P2C samples both — the pick is
-    deterministic: the shallower queue."""
+    fully deterministic: the shallower queue, smallest id on ties. A
+    single-entry head start on r0 pins the exact depth trajectory."""
     router, (r0, r1) = make_router()
-    for _ in range(8):
-        r0.resubmit("preload", AnswerFuture())   # r0 is 8 deep
-    futs = [router.submit(i) for i in range(6)]  # r1 never reaches 8
-    assert r1.queue_depth == 6                   # every pick went shallow
-    assert r0.queue_depth == 8
+    r0.resubmit("preload", AnswerFuture())       # depths (1, 0)
+    futs = [router.submit(i) for i in range(6)]
+    # gap -> r1 (1,1); tie -> r0 (2,1); gap -> r1 (2,2); tie -> r0 ...
+    assert (r0.queue_depth, r1.queue_depth) == (4, 3)
     r0.pump(), r1.pump()
     assert all(f.done() for f in futs)
+
+
+def test_p2c_tie_breaks_deterministically():
+    """Equal depths: the tie goes to the lexically smallest id, for ANY
+    router rng seed — routing decisions are replayable."""
+    for seed in (0, 1, 12345):
+        router, (r0, r1) = make_router(rng=np.random.default_rng(seed))
+        assert r0.queue_depth == r1.queue_depth == 0
+        router.submit(0)
+        assert (r0.queue_depth, r1.queue_depth) == (1, 0)
 
 
 def test_session_affinity_sticks_while_eligible():

@@ -23,6 +23,7 @@ BENCHES = ["fig3", "fig9", "fig10_table1", "fig11", "fig12", "kernels",
 #: bench -> (artifact file, keys every readable record must carry).
 #: A registered bench without a row here produces no persisted artifact.
 ARTIFACTS = {
+    "kernels": ("BENCH_kernels.json", ("bench", "label", "cells")),
     "serving": ("BENCH_serving.json", ("bench", "label", "sweep")),
     "protocols": ("BENCH_protocols.json", ("bench", "label", "cells")),
     "db_updates": ("BENCH_db.json", ("bench", "label", "updates")),

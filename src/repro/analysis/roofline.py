@@ -30,6 +30,41 @@ VMEM_BYTES = 16 * 2**20      # on-chip vector memory per core (~16 MB);
                              # (engine/kernels.py) prunes candidate plans
                              # whose per-grid-step working set exceeds it
 
+# -- achieved-vs-peak bandwidth (kernel bench / plan_report) -----------------
+#: peak memory bandwidth per backend, bytes/s. "tpu" is the v5e HBM figure
+#: above; "gpu"/"cpu" are order-of-magnitude placeholders so fractions
+#: computed off-TPU are honest about being against a *nominal* roof (the
+#: bench labels such rows measured-cpu). CPU is set generously high so the
+#: tuner's bandwidth-bound pruning (engine/tuner.py) can never reject a
+#: candidate on the container that a real machine might still win with.
+PEAK_BYTES_PER_S = {
+    "tpu": HBM_BW,
+    "gpu": 2.0e12,
+    "cpu": 1.0e11,
+}
+
+
+def peak_bytes_per_s(backend=None) -> float:
+    """Peak memory bandwidth for ``backend`` (None -> the engine probe)."""
+    if backend is None:
+        from repro.engine.backend import backend as probe
+        backend = probe()
+    return PEAK_BYTES_PER_S.get(backend, PEAK_BYTES_PER_S["cpu"])
+
+
+def achieved_fraction(bytes_touched: float, wall_s: float, *,
+                      backend=None) -> float:
+    """Fraction of the backend's peak bandwidth a measured run achieved.
+
+    ``bytes_touched / wall_s / peak`` — the roofline-verification number
+    the megakernel bench reports per cell: how close the answer step runs
+    to the memory roof the predicted-bytes model says it must pay.
+    """
+    if wall_s <= 0:
+        return 0.0
+    return bytes_touched / wall_s / peak_bytes_per_s(backend)
+
+
 _DTYPE_BYTES = {
     "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
     "s32": 4, "u32": 4, "s64": 8, "u64": 8,

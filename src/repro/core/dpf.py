@@ -209,6 +209,65 @@ def eval_all(key: DPFKey) -> Tuple[jax.Array, jax.Array]:
     return eval_range(key, 0, key.log_n)
 
 
+def eval_to_depth(
+    key: DPFKey,
+    start_block: jax.Array | int,
+    log_range: int,
+    stop_log: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Partial evaluation: the shard's *internal* nodes at chunk granularity.
+
+    Identical to :func:`eval_range` (same descent, same breadth expansion,
+    so parity is by construction) but stops ``stop_log`` levels above the
+    leaves: returns the corrected subtree-root seeds + control bits of the
+    shard's ``2^(log_range - stop_log)`` chunks of ``2^stop_log`` leaves
+    each. These are the inputs of the fused-scan megakernel
+    (``kernels/fused_scan.py``), which expands the remaining ``stop_log``
+    levels in VMEM — one descent shared across all chunks, unlike the
+    chunked-jnp fused path which re-descends per chunk.
+
+    Returns (seeds ``[2^(log_range - stop_log), 4]`` u32, t same-length).
+    """
+    if log_range > key.log_n:
+        raise ValueError("log_range exceeds domain")
+    if not (0 <= stop_log <= log_range):
+        raise ValueError(f"stop_log={stop_log} outside [0, {log_range}]")
+    depth = key.log_n - log_range
+    start_block = jnp.asarray(start_block, U32)
+    seeds = key.root_seed
+    t = jnp.asarray(key.party, U32)
+    for level in range(depth):
+        bit = (start_block >> U32(depth - 1 - level)) & U32(1)
+        s_l, t_l, s_r, t_r = ggm_double(seeds, rounds=key.rounds)
+        s_cw = key.cw_seed[level]
+        t_cw = key.cw_t[level]
+        s_l = s_l ^ (t * s_cw)
+        s_r = s_r ^ (t * s_cw)
+        t_l = t_l ^ (t & t_cw[0])
+        t_r = t_r ^ (t & t_cw[1])
+        seeds = jnp.where(bit, s_r, s_l)
+        t = jnp.where(bit, t_r, t_l)
+    seeds = seeds[None, :]
+    t = t[None]
+    for level in range(depth, key.log_n - stop_log):
+        seeds, t = _expand_level(
+            seeds, t, key.cw_seed[level], key.cw_t[level], key.rounds
+        )
+    return seeds, t
+
+
+@partial(jax.jit, static_argnames=("log_range", "stop_log"))
+def eval_roots_batch(keys: DPFKey, start_block, log_range: int,
+                     stop_log: int) -> Tuple[jax.Array, jax.Array]:
+    """vmap'd :func:`eval_to_depth` over a batched key pytree.
+
+    Returns (seeds ``[Q, C, 4]`` u32, t ``[Q, C]`` u32) where
+    ``C = 2^(log_range - stop_log)`` chunk roots per query.
+    """
+    return jax.vmap(
+        lambda k: eval_to_depth(k, start_block, log_range, stop_log))(keys)
+
+
 def leaf_bits(t_bits: jax.Array) -> jax.Array:
     """Selection bits for the dpXOR stage (paper's Eval(k, j) values)."""
     return t_bits.astype(U32)

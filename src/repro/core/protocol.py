@@ -73,8 +73,13 @@ class ExecutionPlan:
     expand     "materialize": phase-split — Eval(k,·) selection vectors are
                written out, then scanned (the paper's host-eval structure).
                "fused": chunked expand+scan; selection bits never round-trip
-               through HBM. XOR protocols only — the GEMM contraction always
-               materializes its share matrix.
+               through HBM (XOR protocols; the GEMM ignores it).
+               "fused-pallas": the megakernel (``kernels/fused_scan.py``) —
+               one Pallas program expands each DB tile's GGM leaves from
+               precomputed chunk roots and folds the tile immediately,
+               streaming the DB through double-buffered DMA. Available for
+               XOR *and* additive protocols (the additive body reproduces
+               the int8 GEMM bit-exactly in-kernel).
     scan       "jnp": the pure-jnp oracle contraction (also the GSPMD
                dry-run path). "pallas": the tiled kernel bodies —
                ``kernels/dpxor.py`` for XOR scans, ``kernels/pir_matmul.py``
@@ -95,6 +100,8 @@ class ExecutionPlan:
                reduction tile (``pir_matmul``, pre-engine 1024).
     tile_q     GEMM query-batch tile (sublane dim).
     tile_l     GEMM record-byte tile (lane dim).
+    depth      fused-pallas: rotating DMA buffer count (2 = classic double
+               buffer; other paths ignore it).
     provenance "heuristic" (rule-picked fallback) | "tuned" (measured
                winner from the plan cache) | "forced" (legacy ``path=``
                string). Excluded from equality/hashing: two plans that
@@ -108,6 +115,7 @@ class ExecutionPlan:
     tile_r: int = 2048
     tile_q: int = 8
     tile_l: int = 128
+    depth: int = 2
     provenance: str = field(default="heuristic", compare=False)
 
     @property
@@ -119,7 +127,8 @@ class ExecutionPlan:
         return {"name": self.name, "expand": self.expand, "scan": self.scan,
                 "chunk_log": self.chunk_log, "collective": self.collective,
                 "tile_r": self.tile_r, "tile_q": self.tile_q,
-                "tile_l": self.tile_l, "provenance": self.provenance}
+                "tile_l": self.tile_l, "depth": self.depth,
+                "provenance": self.provenance}
 
 
 #: legacy ``path=`` strings -> plans (the pre-registry server API).
@@ -128,6 +137,7 @@ PATH_PLANS: Dict[str, ExecutionPlan] = {
     "fused": ExecutionPlan(expand="fused", scan="jnp"),
     "matmul": ExecutionPlan(expand="materialize", scan="jnp"),
     "pallas": ExecutionPlan(expand="materialize", scan="pallas"),
+    "fused-pallas": ExecutionPlan(expand="fused-pallas", scan="pallas"),
 }
 
 
@@ -443,6 +453,9 @@ class XorDpf2(_XorProtocol):
         if plan.expand == "fused":
             return _fused_xor_answer(db_local, keys_local, start_block,
                                      log_local, plan, _bits_of_key)
+        if plan.expand == "fused-pallas":
+            return _fused_pallas_xor_answer(db_local, keys_local,
+                                            start_block, log_local, plan)
         raise ValueError(f"unknown expand {plan.expand!r}")
 
 
@@ -475,6 +488,70 @@ def _fused_xor_answer(db_local, keys_local, start_block, log_local, plan,
         return acc
 
     return jax.vmap(one_query)(keys_local)
+
+
+def _fused_pallas_inputs(keys_local, start_block, log_local: int,
+                         rows_local: int, plan: ExecutionPlan):
+    """Marshal batched DPF keys into the megakernel's chunk-root form.
+
+    Legalizes (tile_r, chunk_log) exactly as the kernel entry point will
+    (``ops.fused_tile`` — the slice of correction-word levels must agree
+    with the expansion depth the kernel runs), descends every key once to
+    the chunk-root level (shared across chunks, unlike the chunked-jnp
+    path's per-chunk re-descent), and slices out the last ``clog`` levels
+    of correction words the kernel needs in VMEM.
+    """
+    from repro.kernels import ops
+    tile, clog = ops.fused_tile(rows_local, plan.tile_r,
+                                min(plan.chunk_log, log_local))
+    roots, t_roots = dpf.eval_roots_batch(keys_local, start_block,
+                                          log_local, clog)
+    log_n = keys_local.log_n
+    cw_seed_lv = keys_local.cw_seed[:, log_n - clog:, :]
+    cw_t_lv = keys_local.cw_t[:, log_n - clog:, :]
+    return tile, roots, t_roots, cw_seed_lv, cw_t_lv
+
+
+def _fused_pallas_xor_answer(db_local, keys_local, start_block, log_local,
+                             plan: ExecutionPlan) -> jax.Array:
+    """Megakernel XOR answer: expand-in-kernel + double-buffered DB stream.
+
+    ``keys_local`` is a batched plain DPFKey pytree ([Q, ...] leaves).
+    """
+    from repro.kernels import ops
+    tile, roots, t_roots, cw_s, cw_t = _fused_pallas_inputs(
+        keys_local, start_block, log_local, db_local.shape[0], plan)
+    return ops.fused_scan_xor(db_local, roots, t_roots, cw_s, cw_t,
+                              tile_r=tile, depth=plan.depth)
+
+
+def _fused_pallas_xor_k_answer(db_local, keys_local, start_block, log_local,
+                               plan: ExecutionPlan) -> jax.Array:
+    """Megakernel answer for component-stacked keys ([Q, C, ...] leaves).
+
+    AND distributes over XOR, so running the kernel on the Q·C flattened
+    pseudo-queries and XOR-folding the answers over the component axis
+    equals scanning with the XOR-folded selection bits.
+    """
+    q = keys_local.root_seed.shape[0]
+    flat = jax.tree_util.tree_map(
+        lambda x: x.reshape((-1,) + x.shape[2:]), keys_local)
+    ans = _fused_pallas_xor_answer(db_local, flat, start_block, log_local,
+                                   plan)
+    return xor_fold(ans.reshape((q, -1) + ans.shape[1:]), 1)
+
+
+def _fused_pallas_add_answer(db_local, keys_local, start_block, log_local,
+                             plan: ExecutionPlan) -> jax.Array:
+    """Megakernel additive answer: in-kernel share conversion + select-add,
+    bit-identical int32 to the materialized int8 GEMM."""
+    from repro.kernels import ops
+    tile, roots, t_roots, cw_s, cw_t = _fused_pallas_inputs(
+        keys_local, start_block, log_local, db_local.shape[0], plan)
+    return ops.fused_scan_bytes(db_local, roots, t_roots, cw_s, cw_t,
+                                keys_local.cw_final[:, 0],
+                                party=keys_local.party, tile_r=tile,
+                                depth=plan.depth)
 
 
 # ---------------------------------------------------------------------------
@@ -514,6 +591,9 @@ class AdditiveDpf2(PIRProtocol):
     def answer_local(self, db_local, keys_local, start_block, log_local,
                      plan):
         # db_local is already the int8 byte view [rows_local, item_bytes]
+        if plan.expand == "fused-pallas":
+            return _fused_pallas_add_answer(db_local, keys_local,
+                                            start_block, log_local, plan)
         shares = dpf.eval_bytes_batch(keys_local, start_block, log_local)
         if plan.scan == "pallas":
             from repro.kernels import ops
@@ -610,6 +690,9 @@ class XorDpfK(_XorProtocol):
         if plan.expand == "fused":
             return _fused_xor_answer(db_local, keys_local, start_block,
                                      log_local, plan, _component_bits)
+        if plan.expand == "fused-pallas":
+            return _fused_pallas_xor_k_answer(db_local, keys_local,
+                                              start_block, log_local, plan)
         raise ValueError(f"unknown expand {plan.expand!r}")
 
 

@@ -91,9 +91,16 @@ def chacha_block(key4: jax.Array, *, counter: int = 0, rounds: int = 12) -> jax.
         batch + (4,),
     )
     state = jnp.concatenate([const, key4, key4, ctr], axis=-1)
-    x = [state[..., i] for i in range(16)]
-    for _ in range(rounds // 2):
-        x = _double_round(x)
+    # Rolled (not Python-unrolled) double rounds: GGM evaluation instantiates
+    # this block once per tree level inside scans/vmaps, and the unrolled ARX
+    # graph made XLA compile times grow superlinearly in rounds × levels
+    # (eval_bits_batch at log_n=6 took ~45 s to compile on CPU). The loop
+    # carry is the 16-row state tuple; op order — hence the keystream — is
+    # bit-identical to the unrolled form.
+    x = jax.lax.fori_loop(
+        0, rounds // 2,
+        lambda _, xs: tuple(_double_round(list(xs))),
+        tuple(state[..., i] for i in range(16)))
     out = jnp.stack(x, axis=-1) + state
     return out
 

@@ -103,16 +103,33 @@ def record_plans(cfg, plans: dict, *, backend_name: Optional[str] = None,
     return written
 
 
-def plan_report(cfg, plan, bucket: int, *, n_shards: int = 1) -> dict:
-    """Reporting row for one bucket's chosen plan: provenance + the
-    modeled HBM bytes its answer step moves (dry-run / launch surfaces)."""
+def plan_report(cfg, plan, bucket: int, *, n_shards: int = 1,
+                measured_wall_s: Optional[float] = None,
+                backend_name: Optional[str] = None) -> dict:
+    """Reporting row for one bucket's chosen plan: provenance, the modeled
+    HBM bytes its answer step moves, and the backend's bandwidth roof those
+    bytes are judged against (dry-run / launch / bench surfaces).
+
+    Pass ``measured_wall_s`` (e.g. a tuner timing) to additionally report
+    ``achieved_frac`` — the fraction of peak bandwidth the measured run
+    achieved over the modeled bytes (``analysis.roofline``).
+    """
+    from repro.analysis.roofline import achieved_fraction, peak_bytes_per_s
     from repro.core import protocol as protocol_mod
+    be = backend_name or backend()
     proto = protocol_mod.get(cfg.protocol)
     shape = problem_shape(cfg, bucket, n_shards=n_shards)
-    return {
+    step_bytes = predicted_step_bytes(plan, proto.share_kind, shape)
+    out = {
         "plan": plan.name,
         "label": plan_label(plan),
         "provenance": plan.provenance,
-        "predicted_step_bytes": predicted_step_bytes(
-            plan, proto.share_kind, shape),
+        "predicted_step_bytes": step_bytes,
+        "peak_bytes_per_s": peak_bytes_per_s(be),
     }
+    if measured_wall_s is not None:
+        out["measured_wall_s"] = measured_wall_s
+        out["achieved_frac"] = achieved_fraction(step_bytes,
+                                                 measured_wall_s,
+                                                 backend=be)
+    return out

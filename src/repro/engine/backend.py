@@ -49,6 +49,21 @@ def default_interpret() -> bool:
     return not on_tpu()
 
 
+def resolve_interpret(interpret) -> bool:
+    """Resolve an ``interpret=None`` request against the one backend probe.
+
+    Every Pallas entry point (``kernels/ops.py`` wrappers AND the kernel
+    modules' own jitted functions) funnels through this, so
+    ``REPRO_FORCE_BACKEND`` governs interpret mode for all of them
+    consistently. Must be called *outside* jit: the result becomes a
+    static argument, and resolving inside a jitted function would freeze
+    the env-dependent answer into the trace cache.
+    """
+    if interpret is None:
+        return default_interpret()
+    return bool(interpret)
+
+
 def legal_tile(dim: int, requested: int, *, pow2: bool = False) -> int:
     """Largest legal tile for a dimension: the biggest divisor of ``dim``
     that is <= ``requested`` (and a power of two when the kernel demands

@@ -35,8 +35,10 @@ CACHE_ENV = "REPRO_PLAN_CACHE"
 
 #: ExecutionPlan fields a cache entry round-trips; provenance is stored
 #: alongside (entry-level, default "tuned" for pre-provenance files)
+#: "depth" (fused-pallas DMA buffers) joined in the megakernel PR; older
+#: cache files simply lack the key and fall back to the plan default
 _PLAN_FIELDS = ("expand", "scan", "chunk_log", "collective",
-                "tile_r", "tile_q", "tile_l")
+                "tile_r", "tile_q", "tile_l", "depth")
 
 
 def cache_path() -> Optional[str]:

@@ -68,6 +68,11 @@ class KernelDescriptor:
     #: shape -> {param: candidate values}, already legal for that shape
     space_fn: Callable[[ProblemShape], Dict[str, Tuple[int, ...]]] = \
         field(default=lambda s: {})
+    #: shape, params -> params with *coupled* constraints applied (e.g.
+    #: the megakernel's chunk_log <= log2(tile_r)); runs before dedup so
+    #: two requests that legalize identically are measured once
+    legalize_fn: Callable[[ProblemShape, Dict[str, int]], Dict[str, int]] = \
+        field(default=lambda s, p: p)
     #: shape, params -> per-grid-step VMEM working set (bytes)
     footprint_fn: Callable[[ProblemShape, Dict[str, int]], int] = \
         field(default=lambda s, p: 0)
@@ -95,7 +100,7 @@ class KernelDescriptor:
             if names else [()]
         seen, out = set(), []
         for combo in combos:
-            params = dict(zip(names, combo))
+            params = self.legalize_fn(shape, dict(zip(names, combo)))
             key = tuple(sorted(params.items()))
             if key in seen or not self.feasible(shape, params):
                 continue
@@ -228,6 +233,70 @@ def _lwe_gemm_bytes(shape: ProblemShape, p: Dict[str, int]) -> int:
     return 4 * (q * r + r * l + q * l)
 
 
+# -- the fused megakernel (kernels/fused_scan.py) ---------------------------
+_FUSED_PALLAS_CHUNK_LOGS = (8, 10, 12)
+_FUSED_PALLAS_DEPTHS = (2, 4)
+
+
+def _fused_pallas_space(shape: ProblemShape) -> Dict[str, Tuple[int, ...]]:
+    tiles = sorted({legal_tile(shape.rows, t, pow2=True)
+                    for t in _DPXOR_TILES})
+    logs = sorted({min(c, shape.log_rows) for c in _FUSED_PALLAS_CHUNK_LOGS})
+    return {"tile_r": tuple(tiles), "chunk_log": tuple(logs),
+            "depth": _FUSED_PALLAS_DEPTHS}
+
+
+def _fused_pallas_legalize(shape: ProblemShape,
+                           p: Dict[str, int]) -> Dict[str, int]:
+    """Coupled constraints the product space can't express: one DMA tile
+    must hold whole chunks (chunk_log <= log2(tile_r)) and the rotating
+    buffer count never exceeds the tile count (deeper is pure waste)."""
+    tr = legal_tile(shape.rows, p["tile_r"], pow2=True)
+    cl = min(p["chunk_log"], shape.log_rows, tr.bit_length() - 1)
+    d = max(1, min(p["depth"], shape.rows // tr))
+    return {**p, "tile_r": tr, "chunk_log": cl, "depth": d}
+
+
+def _fused_pallas_xor_footprint(shape: ProblemShape,
+                                p: Dict[str, int]) -> int:
+    q, w = shape.bucket, shape.words
+    tr = p.get("tile_r", legal_tile(shape.rows, 2048, pow2=True))
+    d = p.get("depth", 2)
+    # d rotating DB buffers [W, TR]; expand scratch per tile: 16 ChaCha
+    # state rows + 10 output rows + 1 t row at [Q, TR]; the masked
+    # intermediate [Q, W, TR]; the accumulator [Q, W]
+    return U32_BYTES * (d * w * tr + q * tr * (16 + 10 + 1)
+                        + q * w * tr + q * w)
+
+
+def _fused_pallas_xor_bytes(shape: ProblemShape, p: Dict[str, int]) -> int:
+    q, r, w = shape.bucket, shape.rows, shape.words
+    cl = p.get("chunk_log", 12)
+    c = max(1, r >> cl)
+    # THE headline: the DB streams HBM->VMEM once per *batch* (vs once per
+    # query for fused-jnp); queries ship chunk roots + clog CW levels
+    key_words = c * 5 + cl * 6            # roots[4]+t per chunk, (4+2)/level
+    return (r * w + q * key_words + q * w) * U32_BYTES
+
+
+def _fused_pallas_add_footprint(shape: ProblemShape,
+                                p: Dict[str, int]) -> int:
+    q, l = shape.bucket, shape.item_bytes
+    tr = p.get("tile_r", legal_tile(shape.rows, 2048, pow2=True))
+    d = p.get("depth", 2)
+    # d int8 DB buffers [TR, L]; u32 expand + share-conversion scratch
+    # (16 state + 10 out + 1 t + 1 conv rows at [Q, TR]); int32 out [Q, L]
+    return (d * tr * l + 4 * q * tr * (16 + 10 + 1 + 1) + 4 * q * l)
+
+
+def _fused_pallas_add_bytes(shape: ProblemShape, p: Dict[str, int]) -> int:
+    q, r, l = shape.bucket, shape.rows, shape.item_bytes
+    cl = p.get("chunk_log", 12)
+    c = max(1, r >> cl)
+    key_words = c * 5 + cl * 6 + 1        # + cw_final
+    return r * l + (q * key_words + q * l) * 4
+
+
 def _ggm_space(shape: ProblemShape) -> Dict[str, Tuple[int, ...]]:
     n = shape.rows                         # leaves at the widest level
     return {"tile": tuple(sorted({legal_tile(n, t) for t in _GGM_TILES}))}
@@ -259,6 +328,14 @@ FUSED_XOR = register_kernel(KernelDescriptor(
     bytes_fn=_fused_bytes,
 ))
 
+FUSED_PALLAS_XOR = register_kernel(KernelDescriptor(
+    name="xor-fused-pallas", share_kind="xor",
+    expand="fused-pallas", scan="pallas",
+    space_fn=_fused_pallas_space, legalize_fn=_fused_pallas_legalize,
+    footprint_fn=_fused_pallas_xor_footprint,
+    bytes_fn=_fused_pallas_xor_bytes,
+))
+
 GEMM_JNP = register_kernel(KernelDescriptor(
     name="gemm-jnp", share_kind="additive",
     expand="materialize", scan="jnp",
@@ -270,6 +347,14 @@ GEMM_PALLAS = register_kernel(KernelDescriptor(
     expand="materialize", scan="pallas",
     space_fn=_gemm_space, footprint_fn=_gemm_footprint,
     bytes_fn=_gemm_bytes,
+))
+
+FUSED_PALLAS_GEMM = register_kernel(KernelDescriptor(
+    name="gemm-fused-pallas", share_kind="additive",
+    expand="fused-pallas", scan="pallas",
+    space_fn=_fused_pallas_space, legalize_fn=_fused_pallas_legalize,
+    footprint_fn=_fused_pallas_add_footprint,
+    bytes_fn=_fused_pallas_add_bytes,
 ))
 
 LWE_GEMM_JNP = register_kernel(KernelDescriptor(
@@ -321,15 +406,20 @@ def plans_from_kernel(desc: KernelDescriptor, shape: ProblemShape, *,
 def descriptor_for_plan(plan, share_kind: str) -> KernelDescriptor:
     """The registered descriptor a plan executes on (for byte models).
 
-    Matching mirrors ``answer_local`` dispatch: additive and LWE protocols
-    ignore ``expand`` (the GEMM always materializes its operand matrix), so
-    any such plan — including a legacy ``path="fused"`` one — maps to the
-    GEMM descriptor of its ``scan``; the fused XOR body ignores ``scan``
-    (its inner fold is always the jnp dpxor).
+    Matching mirrors ``answer_local`` dispatch: ``expand="fused-pallas"``
+    is matched exactly first (the megakernel serves XOR *and* additive
+    protocols); beyond that, additive and LWE protocols ignore ``expand``
+    (the GEMM always materializes its operand matrix), so any such plan —
+    including a legacy ``path="fused"`` one — maps to the GEMM descriptor
+    of its ``scan``; the fused XOR body ignores ``scan`` (its inner fold
+    is always the jnp dpxor).
     """
     for d in serve_kernels(share_kind):
-        if share_kind in ("additive", "lwe"):
-            if d.scan == plan.scan:
+        if plan.expand == "fused-pallas":
+            if d.expand == "fused-pallas":
+                return d
+        elif share_kind in ("additive", "lwe"):
+            if d.expand != "fused-pallas" and d.scan == plan.scan:
                 return d
         elif d.expand == plan.expand and (plan.expand == "fused"
                                           or d.scan == plan.scan):
@@ -341,7 +431,8 @@ def descriptor_for_plan(plan, share_kind: str) -> KernelDescriptor:
 def plan_params(plan) -> Dict[str, int]:
     """The tunable fields of a plan, as a descriptor params dict."""
     return {"tile_r": plan.tile_r, "tile_q": plan.tile_q,
-            "tile_l": plan.tile_l, "chunk_log": plan.chunk_log}
+            "tile_l": plan.tile_l, "chunk_log": plan.chunk_log,
+            "depth": plan.depth}
 
 
 def predicted_step_bytes(plan, share_kind: str, shape: ProblemShape) -> int:

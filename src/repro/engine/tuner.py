@@ -35,11 +35,12 @@ from typing import Dict, List, Optional, Sequence
 import jax
 import numpy as np
 
+from repro.analysis import roofline
 from repro.engine.backend import backend as probe_backend
 from repro.engine.cache import spec_signature
 from repro.engine.kernels import (ProblemShape, GEMM_TILE_R_DEFAULT,
                                   get_kernel, plans_from_kernel,
-                                  serve_kernels)
+                                  predicted_step_bytes, serve_kernels)
 
 
 # ---------------------------------------------------------------------------
@@ -132,6 +133,8 @@ def plan_label(plan) -> str:
     lbl = f"{plan.expand}/{plan.scan}"
     if plan.expand == "fused":
         lbl += f"/cl{plan.chunk_log}"
+    elif plan.expand == "fused-pallas":
+        lbl += f"/cl{plan.chunk_log}/tr{plan.tile_r}/d{plan.depth}"
     elif plan.scan == "pallas":
         lbl += f"/tr{plan.tile_r}"
         defaults = _plan_defaults()
@@ -178,6 +181,11 @@ class TuneBudget:
     warmup: int = 1                        # compile + cache warm
     iters: int = 3                         # timed reps (median kept)
     max_seconds: float = 120.0             # soft cap, checked between plans
+    #: skip candidates whose predicted-bytes model alone — divided by the
+    #: backend's peak bandwidth — already exceeds the best measured wall so
+    #: far. Bandwidth is a *lower* bound on wall, so a pruned candidate
+    #: could not have won even at 100% of peak; the saving is its compile.
+    prune_bytes: bool = True
 
 
 #: the CI smoke budget: ≤2 candidates per kernel, single timed rep
@@ -192,6 +200,7 @@ class TuneResult:
     timings: Dict[str, float]      # plan_label -> median seconds
     n_candidates: int              # search-space size after pruning
     n_timed: int                   # how many the budget let us measure
+    n_pruned: int = 0              # skipped on the bytes bound, no compile
 
     @property
     def heuristic_s(self) -> float:
@@ -259,14 +268,26 @@ def tune(cfg, bucket: int, *, backend: Optional[str] = None,
 
     db, keys = _measurement_inputs(cfg, bucket, proto, seed)
     log_local = cfg.log_n
+    shape = problem_shape(cfg, bucket)
+    peak = roofline.peak_bytes_per_s(be)
     t_start = time.perf_counter()
     timings: Dict[str, float] = {}
+    n_pruned = 0
     for i, plan in enumerate(ordered):
         if i > 0 and time.perf_counter() - t_start > budget.max_seconds:
             break                    # budget spent; heuristic was first
         label = plan_label(plan)
         if label in timings:
             continue
+        if i > 0 and budget.prune_bytes and timings:
+            # bandwidth-bound lower bound: if the plan's modeled HBM
+            # traffic can't beat the best measured wall even at 100% of
+            # peak, never pay its compile (heuristic is never pruned)
+            floor_s = predicted_step_bytes(plan, proto.share_kind,
+                                           shape) / peak
+            if floor_s > min(timings.values()):
+                n_pruned += 1
+                continue
         timings[label] = time_plan(proto, plan, db, keys, log_local, budget)
 
     best_label = min(timings, key=timings.get)
@@ -279,9 +300,11 @@ def tune(cfg, bucket: int, *, backend: Optional[str] = None,
                       "heuristic_s": timings[plan_label(heur)],
                       "n_candidates": len(ordered),
                       "n_timed": len(timings),
+                      "n_pruned": n_pruned,
                   })
     return TuneResult(plan=tuned, heuristic=heur, timings=timings,
-                      n_candidates=len(ordered), n_timed=len(timings))
+                      n_candidates=len(ordered), n_timed=len(timings),
+                      n_pruned=n_pruned)
 
 
 def autotune(cfg, buckets: Sequence[int], *,
@@ -413,6 +436,29 @@ def smoke() -> int:
                         spec_signature(cfg), 2)
         assert hit == res.plan and hit.provenance == "tuned"
     print("[smoke] plan cache round-trip ok")
+
+    # megakernel gate: one fused-scan-pallas candidate at the tiniest
+    # shape (2^8 rows: the legalized space collapses to a single point,
+    # one interpret-mode compile) — byte parity vs the materialized
+    # heuristic oracle + descriptor provenance
+    from repro.core import protocol as protocol_mod
+    from repro.engine.kernels import descriptor_for_plan
+    cfg = PIRConfig(n_items=1 << 8, item_bytes=32)
+    proto = protocol_mod.get(cfg.protocol)
+    fused = [p for p in candidate_plans(cfg, 2)
+             if p.expand == "fused-pallas"]
+    assert fused, "no legal fused-pallas candidate at 2^8"
+    plan = fused[0]
+    assert descriptor_for_plan(plan, proto.share_kind).name == \
+        "xor-fused-pallas"
+    db, keys = _measurement_inputs(cfg, 2, proto, seed=7)
+    oracle = heuristic_plan(cfg, 2, backend=probe_backend())
+    want = proto.answer_local(db, keys, 0, cfg.log_n, oracle)
+    got = proto.answer_local(db, keys, 0, cfg.log_n, plan)
+    assert (np.asarray(got) == np.asarray(want)).all(), \
+        "fused-pallas answer diverges from the materialized oracle"
+    print(f"[smoke] fused-pallas megakernel parity ok "
+          f"({plan_label(plan)})")
     return 0
 
 

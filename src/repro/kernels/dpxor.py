@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.engine.backend import resolve_interpret
+
 U32 = jnp.uint32
 
 
@@ -70,13 +72,12 @@ def _dpxor_kernel(bits_ref, db_ref, out_ref, *, tile_r: int):
     out_ref[...] ^= _fold_xor_lanes(masked)[..., 0]
 
 
-@functools.partial(jax.jit, static_argnames=("tile_r", "interpret"))
 def dpxor_t(
     db_t: jax.Array,
     bits: jax.Array,
     *,
     tile_r: int = 2048,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Batched select-XOR scan over a word-transposed DB shard.
 
@@ -84,10 +85,25 @@ def dpxor_t(
       db_t:  ``[W, R] uint32`` — DB shard, words-major (R = rows, power of 2).
       bits:  ``[Q, R] uint32`` — per-query selection bits (DPF leaf bits).
       tile_r: rows staged through VMEM per grid step (the WRAM-analogue).
-      interpret: run the kernel body in interpret mode (CPU validation).
+      interpret: run the kernel body in interpret mode (CPU validation);
+        ``None`` resolves against the engine's backend probe
+        (``REPRO_FORCE_BACKEND``) *before* entering the jitted body, so the
+        env-dependent answer never freezes into a trace cache.
 
     Returns ``[Q, W] uint32`` — per-query XOR subresults (the DPU's s_d).
     """
+    return _dpxor_t_jit(db_t, bits, tile_r=tile_r,
+                        interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r", "interpret"))
+def _dpxor_t_jit(
+    db_t: jax.Array,
+    bits: jax.Array,
+    *,
+    tile_r: int,
+    interpret: bool,
+) -> jax.Array:
     w, r = db_t.shape
     q = bits.shape[0]
     if bits.shape[1] != r:

@@ -1,0 +1,309 @@
+"""Fused GGM-expand + DB-scan Pallas megakernel with double-buffered DMA.
+
+Paper analogue
+--------------
+IM-PIR's core win is doing the oblivious scan where the bytes live: each
+UPMEM bank scans its MRAM-resident chunk in place instead of hauling the
+database across the memory bus (paper §3.3). The TPU analogue is this
+kernel: the DB shard stays in HBM and streams through VMEM tiles exactly
+once per *batch*, while the DPF selection vector for that tile is expanded
+on the fly from per-chunk GGM subtree roots — so the one-hot expansion
+never exists in HBM at all (the earlier "fused" path kept bits out of HBM
+but still round-tripped each chunk's fold through separate XLA ops).
+
+Structure (DESIGN.md §13)
+-------------------------
+One ``pallas_call`` with no grid. The DB input lives in ``pltpu.ANY``
+memory space (HBM on TPU); a ``[depth, ...]`` VMEM scratch holds the
+rotating DMA buffers, paired with a ``[depth]`` DMA-semaphore array:
+
+  prologue:  start async copies for tiles 0..depth-1
+  tile i:    wait slot (i % depth)  ->  expand the tile's GGM leaves
+             from its chunk roots   ->  accumulate the select-reduction
+             ->  start the copy for tile i+depth into the freed slot
+
+The same ``fori_loop`` program runs under interpret mode (bit-exact CPU
+validation — ``pltpu.emit_pipeline`` cannot, which is why the rotation is
+manual) and compiles to genuinely overlapped DMA on real TPUs.
+
+Inputs are *chunk roots*: the host precomputes each query's GGM descent
+down to depth ``log_n - chunk_log`` (``dpf.eval_roots_batch`` — shared
+across all chunks, unlike the chunked-jnp path which re-descends per
+chunk) and ships ``[Q, n_chunks]`` subtree seeds + control bits plus the
+last ``chunk_log`` levels of correction words. The kernel breadth-expands
+those ``chunk_log`` levels in VMEM with the same ChaCha rounds as
+``kernels/ggm_expand.py`` (bit-exactness with ``crypto.chacha`` is what
+makes the byte-parity suite possible), interleaving children so leaf j of
+the tile lands in lane j.
+
+Two accumulation bodies share the expansion:
+
+  xor       bits -> full-word masks -> AND with the [W, tile_r] DB tile
+            -> lane-halving XOR fold (exactly ``dpxor``'s reduction), so
+            the answer is bit-identical to the materialized path.
+  additive  leaf seeds -> payload-conversion PRG (counter=1) -> Z_256
+            shares with int8 *sign semantics* reproduced in-kernel
+            (share - 256 where share >= 128) -> int32 dot against the
+            int8 DB tile: bit-identical int32 to the materialized GEMM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.engine.backend import resolve_interpret
+from repro.kernels.dpxor import _fold_xor_lanes
+from repro.kernels.ggm_expand import _chacha_rows
+
+U32 = jnp.uint32
+
+
+def _interleave(left: jax.Array, right: jax.Array) -> jax.Array:
+    """[Q, m] x2 -> [Q, 2m] with children interleaved to leaf order."""
+    q, m = left.shape
+    return jnp.stack([left, right], axis=-1).reshape(q, 2 * m)
+
+
+def _expand_tile(seed_rows, t, cws_ref, cwt_ref, *, clog: int, rounds: int):
+    """Breadth-expand ``clog`` corrected GGM levels for one DB tile.
+
+    seed_rows: list of 4 ``[Q, m]`` u32 chunk-root seed words; t: ``[Q, m]``
+    control bits. cws_ref ``[clog, 4, Q]`` / cwt_ref ``[clog, 2, Q]`` carry
+    the per-query correction words for the *last* clog tree levels.
+    Returns (leaf seed_rows [Q, m << clog] x4, leaf t [Q, m << clog]).
+    """
+    for lvl in range(clog):
+        out = _chacha_rows(seed_rows, counter=0, rounds=rounds)
+        mask = U32(0) - t                                    # [Q, m]
+        new_rows = []
+        for w in range(4):
+            cw = cws_ref[lvl, w, :][:, None]                 # [Q, 1]
+            new_rows.append(_interleave(out[w] ^ (mask & cw),
+                                        out[4 + w] ^ (mask & cw)))
+        t_l = (out[8] & U32(1)) ^ (t & cwt_ref[lvl, 0, :][:, None])
+        t_r = (out[9] & U32(1)) ^ (t & cwt_ref[lvl, 1, :][:, None])
+        seed_rows = new_rows
+        t = _interleave(t_l, t_r)
+    return seed_rows, t
+
+
+def _fused_xor_kernel(roots_ref, troots_ref, cws_ref, cwt_ref, db_ref,
+                      out_ref, buf_ref, sem_ref, *, tile_r: int, clog: int,
+                      depth: int, rounds: int, n_tiles: int):
+    """XOR body: db_t [W, R] (ANY) -> out [Q, W] (VMEM)."""
+    cpt = tile_r >> clog                   # chunk roots per tile
+    q, w_words = out_ref.shape
+
+    def copy_in(i, slot):
+        return pltpu.make_async_copy(
+            db_ref.at[:, pl.ds(i * tile_r, tile_r)],
+            buf_ref.at[slot], sem_ref.at[slot])
+
+    for s in range(min(depth, n_tiles)):   # prologue: fill the pipeline
+        copy_in(s, s).start()
+
+    def body(i, acc):
+        slot = jax.lax.rem(i, depth)
+        copy_in(i, slot).wait()
+        c0 = i * cpt
+        seed_rows = [roots_ref[w, :, pl.ds(c0, cpt)] for w in range(4)]
+        t = troots_ref[:, pl.ds(c0, cpt)]
+        _, bits = _expand_tile(seed_rows, t, cws_ref, cwt_ref,
+                               clog=clog, rounds=rounds)
+        mask = U32(0) - bits                               # [Q, tile_r]
+        db_tile = buf_ref[slot]                            # [W, tile_r]
+        masked = mask[:, None, :] & db_tile[None, :, :]    # [Q, W, tile_r]
+        acc = acc ^ _fold_xor_lanes(masked)[..., 0]
+
+        @pl.when(i + depth < n_tiles)
+        def _():                           # refill the slot just freed
+            copy_in(i + depth, slot).start()
+        return acc
+
+    acc0 = jnp.zeros((q, w_words), U32)
+    out_ref[...] = jax.lax.fori_loop(0, n_tiles, body, acc0)
+
+
+def _fused_add_kernel(roots_ref, troots_ref, cws_ref, cwt_ref, cwf_ref,
+                      db_ref, out_ref, buf_ref, sem_ref, *, tile_r: int,
+                      clog: int, depth: int, rounds: int, n_tiles: int,
+                      party: int):
+    """Additive body: db [R, L] i8 (ANY) -> out [Q, L] i32 (VMEM)."""
+    cpt = tile_r >> clog
+    q, n_bytes = out_ref.shape
+
+    def copy_in(i, slot):
+        return pltpu.make_async_copy(
+            db_ref.at[pl.ds(i * tile_r, tile_r), :],
+            buf_ref.at[slot], sem_ref.at[slot])
+
+    for s in range(min(depth, n_tiles)):
+        copy_in(s, s).start()
+
+    def body(i, acc):
+        slot = jax.lax.rem(i, depth)
+        copy_in(i, slot).wait()
+        c0 = i * cpt
+        seed_rows = [roots_ref[w, :, pl.ds(c0, cpt)] for w in range(4)]
+        t = troots_ref[:, pl.ds(c0, cpt)]
+        seed_rows, t = _expand_tile(seed_rows, t, cws_ref, cwt_ref,
+                                    clog=clog, rounds=rounds)
+        # payload conversion: word 0 of the counter=1 block (prg_bits)
+        conv = _chacha_rows(seed_rows, counter=1, rounds=rounds)[0]
+        cwf = cwf_ref[0, :][:, None] & U32(0xFF)           # [Q, 1]
+        share = ((conv & U32(0xFF)) + t * cwf) & U32(0xFF)
+        if party == 1:
+            share = (U32(256) - share) & U32(0xFF)
+        # int8 sign semantics, reproduced so the int32 accumulation is
+        # bit-identical to the materialized int8 GEMM
+        s32 = share.astype(jnp.int32)
+        s32 = jnp.where(share >= U32(128), s32 - 256, s32)
+        db32 = buf_ref[slot].astype(jnp.int32)             # [tile_r, L]
+        acc = acc + jax.lax.dot_general(
+            s32, db32, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+
+        @pl.when(i + depth < n_tiles)
+        def _():
+            copy_in(i + depth, slot).start()
+        return acc
+
+    acc0 = jnp.zeros((q, n_bytes), jnp.int32)
+    out_ref[...] = jax.lax.fori_loop(0, n_tiles, body, acc0)
+
+
+def _check_args(r, c, clog, tile_r, depth):
+    if tile_r <= 0 or tile_r & (tile_r - 1):
+        raise ValueError(f"tile_r must be a power of two, got {tile_r}")
+    if r % tile_r:
+        raise ValueError(f"rows {r} not divisible by tile_r {tile_r}")
+    if (1 << clog) > tile_r:
+        raise ValueError(f"chunk 2^{clog} exceeds tile_r {tile_r}: "
+                         "legalize chunk_log <= log2(tile_r) first")
+    if c << clog != r:
+        raise ValueError(f"{c} chunk roots x 2^{clog} leaves != rows {r}")
+    if depth < 1:
+        raise ValueError(f"buffer depth must be >= 1, got {depth}")
+
+
+def fused_scan_xor_t(db_t: jax.Array, roots_t: jax.Array,
+                     t_roots: jax.Array, cw_seed_t: jax.Array,
+                     cw_t_t: jax.Array, *, tile_r: int, depth: int,
+                     rounds: int = 12,
+                     interpret: bool | None = None) -> jax.Array:
+    """Fused expand+XOR-scan over a word-transposed DB shard.
+
+    Args:
+      db_t:      ``[W, R] uint32`` word-transposed DB shard.
+      roots_t:   ``[4, Q, C] uint32`` chunk-root seed words.
+      t_roots:   ``[Q, C] uint32`` chunk-root control bits.
+      cw_seed_t: ``[clog, 4, Q] uint32`` seed CWs for the last clog levels.
+      cw_t_t:    ``[clog, 2, Q] uint32`` (tL, tR) CWs for the same levels.
+      tile_r:    DB rows per DMA tile (power of two dividing R).
+      depth:     rotating DMA buffer count (2 = classic double buffer).
+      interpret: ``None`` resolves against the engine backend probe
+        (``REPRO_FORCE_BACKEND``), outside the jit boundary.
+
+    Returns ``[Q, W] uint32`` per-query XOR answers, bit-identical to the
+    materialized ``eval_bits`` + ``dpxor`` path.
+    """
+    return _fused_scan_xor_jit(db_t, roots_t, t_roots, cw_seed_t, cw_t_t,
+                               tile_r=tile_r, depth=depth, rounds=rounds,
+                               interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r", "depth", "rounds",
+                                             "interpret"))
+def _fused_scan_xor_jit(db_t: jax.Array, roots_t: jax.Array,
+                        t_roots: jax.Array, cw_seed_t: jax.Array,
+                        cw_t_t: jax.Array, *, tile_r: int, depth: int,
+                        rounds: int, interpret: bool) -> jax.Array:
+    w, r = db_t.shape
+    clog = cw_seed_t.shape[0]
+    q, c = t_roots.shape
+    _check_args(r, c, clog, tile_r, depth)
+    n_tiles = r // tile_r
+    if clog == 0:
+        # Degenerate point: the roots already are the leaves, so no CW
+        # levels ship. Zero-sized operands break interpret-mode block
+        # padding; pad to one (never-read) level instead.
+        cw_seed_t = jnp.zeros((1, 4, q), U32)
+        cw_t_t = jnp.zeros((1, 2, q), U32)
+    kernel = functools.partial(
+        _fused_xor_kernel, tile_r=tile_r, clog=clog,
+        depth=min(depth, n_tiles), rounds=rounds, n_tiles=n_tiles)
+    return pl.pallas_call(
+        kernel,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),    # roots_t
+            pl.BlockSpec(memory_space=pltpu.ANY),    # t_roots
+            pl.BlockSpec(memory_space=pltpu.ANY),    # cw_seed_t
+            pl.BlockSpec(memory_space=pltpu.ANY),    # cw_t_t
+            pl.BlockSpec(memory_space=pltpu.ANY),    # db_t (streamed)
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct((q, w), U32),
+        scratch_shapes=[
+            pltpu.VMEM((min(depth, n_tiles), w, tile_r), U32),
+            pltpu.SemaphoreType.DMA((min(depth, n_tiles),)),
+        ],
+        interpret=interpret,
+    )(roots_t.astype(U32), t_roots.astype(U32), cw_seed_t.astype(U32),
+      cw_t_t.astype(U32), db_t.astype(U32))
+
+
+def fused_scan_add(db_bytes: jax.Array, roots_t: jax.Array,
+                   t_roots: jax.Array, cw_seed_t: jax.Array,
+                   cw_t_t: jax.Array, cw_final: jax.Array, *, party: int,
+                   tile_r: int, depth: int, rounds: int = 12,
+                   interpret: bool | None = None) -> jax.Array:
+    """Fused expand+select-add over an int8 byte-view DB shard.
+
+    ``db_bytes [R, L] int8``; ``cw_final [Q] uint32`` is the payload
+    correction word; other args as :func:`fused_scan_xor_t`. Returns
+    ``[Q, L] int32`` — bit-identical to ``eval_bytes_batch`` + the int8
+    GEMM (``answer_additive_matmul``).
+    """
+    return _fused_scan_add_jit(db_bytes, roots_t, t_roots, cw_seed_t,
+                               cw_t_t, cw_final, party=party,
+                               tile_r=tile_r, depth=depth, rounds=rounds,
+                               interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r", "depth", "rounds",
+                                             "party", "interpret"))
+def _fused_scan_add_jit(db_bytes: jax.Array, roots_t: jax.Array,
+                        t_roots: jax.Array, cw_seed_t: jax.Array,
+                        cw_t_t: jax.Array, cw_final: jax.Array, *,
+                        party: int, tile_r: int, depth: int, rounds: int,
+                        interpret: bool) -> jax.Array:
+    r, l = db_bytes.shape
+    clog = cw_seed_t.shape[0]
+    q, c = t_roots.shape
+    _check_args(r, c, clog, tile_r, depth)
+    n_tiles = r // tile_r
+    if clog == 0:
+        # See fused_scan_xor_t: pad the zero-level CW operands.
+        cw_seed_t = jnp.zeros((1, 4, q), U32)
+        cw_t_t = jnp.zeros((1, 2, q), U32)
+    kernel = functools.partial(
+        _fused_add_kernel, tile_r=tile_r, clog=clog,
+        depth=min(depth, n_tiles), rounds=rounds, n_tiles=n_tiles,
+        party=party)
+    return pl.pallas_call(
+        kernel,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * 6,
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct((q, l), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((min(depth, n_tiles), tile_r, l), jnp.int8),
+            pltpu.SemaphoreType.DMA((min(depth, n_tiles),)),
+        ],
+        interpret=interpret,
+    )(roots_t.astype(U32), t_roots.astype(U32), cw_seed_t.astype(U32),
+      cw_t_t.astype(U32), cw_final.astype(U32)[None, :],
+      db_bytes.astype(jnp.int8))

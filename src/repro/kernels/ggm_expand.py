@@ -33,6 +33,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.crypto.chacha import SIGMA
+from repro.engine.backend import resolve_interpret
 
 U32 = jnp.uint32
 
@@ -63,8 +64,9 @@ def _chacha_rows(seed_rows, counter: int, rounds: int):
     ctr_words = [counter & 0xFFFFFFFF, 0x5049522D, 0x494D5049, 0x52212121]
     ctr = [jnp.full(tile, np.uint32(c)) for c in ctr_words]
     state = const + seed_rows + seed_rows + ctr
-    x = list(state)
-    for _ in range(rounds // 2):
+
+    def double_round(_, xs):
+        x = list(xs)
         # column rounds
         for i in range(4):
             x[i], x[4 + i], x[8 + i], x[12 + i] = _quarter(
@@ -74,6 +76,14 @@ def _chacha_rows(seed_rows, counter: int, rounds: int):
         for i in range(4):
             a, b, c, d = i, 4 + (i + 1) % 4, 8 + (i + 2) % 4, 12 + (i + 3) % 4
             x[a], x[b], x[c], x[d] = _quarter(x[a], x[b], x[c], x[d])
+        return tuple(x)
+
+    # Rolled (not Python-unrolled) double rounds: every iteration is the
+    # same ARX dataflow, and callers like the fused megakernel instantiate
+    # this permutation once per tree level — unrolled, the XLA:CPU graph
+    # of the interpret-mode emulation grew superlinearly in rounds × levels
+    # (the additive fused body hit a >15 min, >20 GB compile at rounds=12).
+    x = jax.lax.fori_loop(0, rounds // 2, double_round, tuple(state))
     return [xi + si for xi, si in zip(x, state)]
 
 
@@ -94,7 +104,6 @@ def _ggm_expand_kernel(seeds_ref, t_ref, cw_seed_ref, cw_t_ref,
     tout_ref[1, :] = t_r
 
 
-@functools.partial(jax.jit, static_argnames=("rounds", "tile", "interpret"))
 def ggm_expand_level(
     seeds_t: jax.Array,
     t_bits: jax.Array,
@@ -103,7 +112,7 @@ def ggm_expand_level(
     *,
     rounds: int = 12,
     tile: int = 1024,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """One corrected GGM level for ``n`` nodes (lane-parallel).
 
@@ -112,10 +121,28 @@ def ggm_expand_level(
       t_bits:  ``[n] uint32`` node control bits.
       cw_seed: ``[4] uint32`` level seed correction word.
       cw_t:    ``[2] uint32`` level (tL, tR) control corrections.
+      interpret: ``None`` resolves against the engine backend probe
+        (``REPRO_FORCE_BACKEND``), outside the jit boundary.
 
     Returns ``(children_t [8, n], t_children [2, n])`` — lane j's children
     are column j of each half; the caller interleaves to leaf order.
     """
+    return _ggm_expand_level_jit(seeds_t, t_bits, cw_seed, cw_t,
+                                 rounds=rounds, tile=tile,
+                                 interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("rounds", "tile", "interpret"))
+def _ggm_expand_level_jit(
+    seeds_t: jax.Array,
+    t_bits: jax.Array,
+    cw_seed: jax.Array,
+    cw_t: jax.Array,
+    *,
+    rounds: int,
+    tile: int,
+    interpret: bool,
+):
     n = seeds_t.shape[1]
     tile = min(tile, n)
     if n % tile:

@@ -17,8 +17,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.engine.backend import default_interpret, legal_tile, on_tpu
+from repro.engine.backend import (default_interpret, legal_tile, on_tpu,
+                                  resolve_interpret)
 from repro.kernels.dpxor import dpxor_t
+from repro.kernels.fused_scan import fused_scan_add, fused_scan_xor_t
 from repro.kernels.ggm_expand import ggm_expand_level
 from repro.kernels.pir_matmul import lwe_matmul, pir_matmul
 
@@ -32,10 +34,14 @@ def _on_tpu() -> bool:
     return on_tpu()
 
 
-# ``default_interpret`` is re-exported from engine.backend unchanged: real
-# Mosaic only on an (effective) TPU backend.
-__all__ = ["default_interpret", "dpxor", "dpxor_transposed", "ggm_expand",
-           "ggm_eval_leaves", "lwe_gemm", "pir_gemm"]
+# ``default_interpret``/``resolve_interpret`` are re-exported from
+# engine.backend unchanged: real Mosaic only on an (effective) TPU backend.
+# Since the fused-scan PR every kernel module's own entry point resolves
+# ``interpret=None`` through the same probe (outside its jit boundary), so
+# these wrappers just pass the request through.
+__all__ = ["default_interpret", "resolve_interpret", "dpxor",
+           "dpxor_transposed", "fused_scan_xor", "fused_scan_bytes", "fused_tile",
+           "ggm_expand", "ggm_eval_leaves", "lwe_gemm", "pir_gemm"]
 
 
 # ---------------------------------------------------------------------------
@@ -55,8 +61,6 @@ def dpxor(db_words: jax.Array, bits: jax.Array, *, tile_r: int = 2048,
     old ``min(tile_r, R)`` clamp produced illegal tiles on
     non-power-of-two row counts.
     """
-    if interpret is None:
-        interpret = default_interpret()
     return dpxor_t(db_words.T, bits,
                    tile_r=legal_tile(db_words.shape[0], tile_r, pow2=True),
                    interpret=interpret)
@@ -65,11 +69,72 @@ def dpxor(db_words: jax.Array, bits: jax.Array, *, tile_r: int = 2048,
 def dpxor_transposed(db_t: jax.Array, bits: jax.Array, *, tile_r: int = 2048,
                      interpret: bool | None = None) -> jax.Array:
     """Select-XOR scan on a pre-transposed [W, R] DB shard."""
-    if interpret is None:
-        interpret = default_interpret()
     return dpxor_t(db_t, bits,
                    tile_r=legal_tile(db_t.shape[1], tile_r, pow2=True),
                    interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Fused GGM-expand + scan megakernel (kernels/fused_scan.py)
+# ---------------------------------------------------------------------------
+
+def fused_tile(rows: int, tile_r: int, clog: int) -> tuple[int, int]:
+    """Legalize the megakernel's (tile_r, chunk_log) request for a shard.
+
+    tile_r legalizes to the largest power-of-two divisor of the row count;
+    chunk_log clamps so one DB tile always holds whole chunks (the kernel
+    expands each tile's leaves from its own chunk roots — a chunk spanning
+    tiles would need cross-tile expansion state).
+    """
+    tile = legal_tile(rows, tile_r, pow2=True)
+    return tile, min(clog, tile.bit_length() - 1)
+
+
+def fused_scan_xor(db_words: jax.Array, roots: jax.Array, t_roots: jax.Array,
+                   cw_seed_lv: jax.Array, cw_t_lv: jax.Array, *,
+                   tile_r: int = 2048, depth: int = 2, rounds: int = 12,
+                   interpret: bool | None = None) -> jax.Array:
+    """Fused expand+XOR megakernel, row-major DB entry point.
+
+    Args:
+      db_words:   ``[R, W] uint32`` row-major DB shard.
+      roots:      ``[Q, C, 4] uint32`` chunk-root seeds
+                  (``dpf.eval_roots_batch`` with ``stop_log = log2(R/C)``).
+      t_roots:    ``[Q, C] uint32`` chunk-root control bits.
+      cw_seed_lv: ``[Q, clog, 4] uint32`` — the *last* clog levels of each
+                  key's ``cw_seed`` (``key.cw_seed[:, log_n-clog:, :]``).
+      cw_t_lv:    ``[Q, clog, 2] uint32`` — same slice of ``cw_t``.
+      tile_r:     requested DMA tile (legalized; must hold whole chunks —
+                  callers legalize chunk_log via the same rule, see
+                  ``core/protocol.py _fused_pallas_inputs``).
+      depth:      rotating DMA buffer count.
+    """
+    tile, _ = fused_tile(db_words.shape[0], tile_r, cw_seed_lv.shape[1])
+    return fused_scan_xor_t(
+        db_words.T, jnp.transpose(roots, (2, 0, 1)), t_roots,
+        jnp.transpose(cw_seed_lv, (1, 2, 0)),
+        jnp.transpose(cw_t_lv, (1, 2, 0)),
+        tile_r=tile, depth=depth, rounds=rounds, interpret=interpret)
+
+
+def fused_scan_bytes(db_bytes: jax.Array, roots: jax.Array,
+                     t_roots: jax.Array, cw_seed_lv: jax.Array,
+                     cw_t_lv: jax.Array, cw_final: jax.Array, *, party: int,
+                     tile_r: int = 2048, depth: int = 2, rounds: int = 12,
+                     interpret: bool | None = None) -> jax.Array:
+    """Fused expand+select-add megakernel over the int8 byte view.
+
+    Same chunk-root inputs as :func:`fused_scan_xor` plus ``cw_final [Q]``
+    (payload correction word) and the static ``party``; returns
+    ``[Q, L] int32`` bit-identical to the materialized int8 GEMM.
+    """
+    tile, _ = fused_tile(db_bytes.shape[0], tile_r, cw_seed_lv.shape[1])
+    return fused_scan_add(
+        db_bytes, jnp.transpose(roots, (2, 0, 1)), t_roots,
+        jnp.transpose(cw_seed_lv, (1, 2, 0)),
+        jnp.transpose(cw_t_lv, (1, 2, 0)), cw_final,
+        party=party, tile_r=tile, depth=depth, rounds=rounds,
+        interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -90,8 +155,6 @@ def ggm_expand(seeds: jax.Array, t_bits: jax.Array, cw_seed: jax.Array,
     On TPU (interpret=False) the intended production tile is 512–2048 lanes
     (VMEM: 16 state rows × tile × 4 B ≲ 128 KB per step).
     """
-    if interpret is None:
-        interpret = default_interpret()
     n = seeds.shape[0]
     children_t, t2 = ggm_expand_level(
         seeds.T, t_bits, cw_seed, cw_t,
@@ -134,8 +197,6 @@ def pir_gemm(shares: jax.Array, db_bytes: jax.Array, *, tile_q: int = 8,
     (``engine.legal_tile``), so non-power-of-two shapes pick a working
     tiling instead of tripping ``pir_matmul``'s divisibility check.
     """
-    if interpret is None:
-        interpret = default_interpret()
     q, r = shares.shape
     l = db_bytes.shape[1]
     return pir_matmul(
@@ -155,8 +216,6 @@ def lwe_gemm(ct: jax.Array, db_bytes32: jax.Array, *, tile_q: int = 8,
     the accumulate wraps mod 2^32 = mod q, so this is the exact Z_q GEMM
     of the lwe-simple-1 answer step.
     """
-    if interpret is None:
-        interpret = default_interpret()
     q, r = ct.shape
     l = db_bytes32.shape[1]
     return lwe_matmul(

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.engine.backend import resolve_interpret
+
 I32 = jnp.int32
 
 
@@ -43,9 +45,6 @@ def _matmul_kernel(s_ref, d_ref, o_ref):
     )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("tile_q", "tile_r", "tile_l", "interpret")
-)
 def pir_matmul(
     shares: jax.Array,
     db_bytes: jax.Array,
@@ -53,13 +52,32 @@ def pir_matmul(
     tile_q: int = 8,
     tile_r: int = 1024,
     tile_l: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """``shares[Q, R] i8 × db[R, L] i8 -> [Q, L] i32`` partial PIR answers.
 
     Tile defaults target the MXU's 128-multiple alignment on the reduction
-    and lane dims; Q (query batch) may be small, so it rides the sublane dim.
+    and lane dims; Q (query batch) may be small, so it rides the sublane
+    dim. ``interpret=None`` resolves against the engine backend probe
+    (``REPRO_FORCE_BACKEND``), outside the jit boundary.
     """
+    return _pir_matmul_jit(shares, db_bytes, tile_q=tile_q, tile_r=tile_r,
+                           tile_l=tile_l,
+                           interpret=resolve_interpret(interpret))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_q", "tile_r", "tile_l", "interpret")
+)
+def _pir_matmul_jit(
+    shares: jax.Array,
+    db_bytes: jax.Array,
+    *,
+    tile_q: int,
+    tile_r: int,
+    tile_l: int,
+    interpret: bool,
+) -> jax.Array:
     q, r = shares.shape
     r2, l = db_bytes.shape
     if r != r2:
@@ -82,9 +100,6 @@ def pir_matmul(
     )(shares.astype(jnp.int8), db_bytes.astype(jnp.int8))
 
 
-@functools.partial(
-    jax.jit, static_argnames=("tile_q", "tile_r", "tile_l", "interpret")
-)
 def lwe_matmul(
     ct: jax.Array,
     db_bytes32: jax.Array,
@@ -92,7 +107,7 @@ def lwe_matmul(
     tile_q: int = 8,
     tile_r: int = 1024,
     tile_l: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """``ct[Q, R] i32 × db[R, L] i32 -> [Q, L] i32`` LWE PIR answers.
 
@@ -103,6 +118,23 @@ def lwe_matmul(
     the int8 path, which is why the engine registers a separate descriptor
     with its own VMEM footprint model.
     """
+    return _lwe_matmul_jit(ct, db_bytes32, tile_q=tile_q, tile_r=tile_r,
+                           tile_l=tile_l,
+                           interpret=resolve_interpret(interpret))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_q", "tile_r", "tile_l", "interpret")
+)
+def _lwe_matmul_jit(
+    ct: jax.Array,
+    db_bytes32: jax.Array,
+    *,
+    tile_q: int,
+    tile_r: int,
+    tile_l: int,
+    interpret: bool,
+) -> jax.Array:
     q, r = ct.shape
     r2, l = db_bytes32.shape
     if r != r2:

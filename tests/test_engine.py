@@ -165,15 +165,21 @@ def test_candidate_plans_cover_registered_kernels():
     cfg = PIRConfig(n_items=N)
     names = {(p.expand, p.scan) for p in engine.candidate_plans(cfg, 2)}
     assert names == {("materialize", "jnp"), ("materialize", "pallas"),
-                     ("fused", "jnp")}
+                     ("fused", "jnp"), ("fused-pallas", "pallas")}
     for p in engine.candidate_plans(cfg, 2):
         if p.scan == "pallas":
             assert N % p.tile_r == 0 and p.tile_r & (p.tile_r - 1) == 0
+        if p.expand == "fused-pallas":
+            # megakernel coupling: one DMA tile holds whole chunks, and
+            # the rotation never exceeds the tile count
+            assert (1 << p.chunk_log) <= p.tile_r
+            assert 1 <= p.depth <= max(1, N // p.tile_r)
     cfga = PIRConfig(n_items=N, protocol="additive-dpf-2")
     names_a = {(p.expand, p.scan) for p in engine.candidate_plans(cfga, 2)}
-    assert names_a == {("materialize", "jnp"), ("materialize", "pallas")}
+    assert names_a == {("materialize", "jnp"), ("materialize", "pallas"),
+                       ("fused-pallas", "pallas")}
     for p in engine.candidate_plans(cfga, 2):
-        if p.scan == "pallas":
+        if p.scan == "pallas" and p.expand == "materialize":
             assert N % p.tile_r == 0 and 2 % p.tile_q == 0 \
                 and 32 % p.tile_l == 0
 

@@ -78,7 +78,7 @@ def run() -> Csv:
         "log_n": LOG_N, "item_bytes": 32, "buckets": list(BUCKETS),
         "budget": {"max_candidates": BUDGET.max_candidates,
                    "iters": BUDGET.iters, "warmup": BUDGET.warmup},
-        "backend": engine.backend(),
+        "backend": engine.probe_backend(),
         "plan_cache": cache.path,
         "cells": cells,
     })

@@ -70,7 +70,7 @@ def _plans_by_label(cfg, bucket):
 
 
 def run() -> Csv:
-    be = engine.backend()
+    be = engine.probe_backend()
     peak = roofline.peak_bytes_per_s(be)
     label = "measured-cpu" if be == "cpu" else f"measured-{be}"
     csv = Csv(["cell", "path", "plan", "qps", "modeled_mb",

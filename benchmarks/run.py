@@ -18,7 +18,7 @@ import time
 
 BENCHES = ["fig3", "fig9", "fig10_table1", "fig11", "fig12", "kernels",
            "serving", "protocols", "db_updates", "autotune", "replicas",
-           "chaos"]
+           "chaos", "batch"]
 
 #: bench -> (artifact file, keys every readable record must carry).
 #: A registered bench without a row here produces no persisted artifact.
@@ -33,6 +33,9 @@ ARTIFACTS = {
                   "acceptance")),
     "chaos": ("BENCH_chaos.json",
               ("bench", "label", "schema", "verify", "recovery",
+               "acceptance")),
+    "batch": ("BENCH_batch.json",
+              ("bench", "label", "schema", "cells", "records_per_s",
                "acceptance")),
 }
 
@@ -61,8 +64,17 @@ def report(names) -> int:
             print(f"{name:12s} SKIP (stale schema in {path}: missing "
                   f"{missing} — regenerate)")
             continue
-        print(f"{name:12s} OK   {path} label={rec.get('label')} "
-              f"platform={rec.get('platform')}")
+        # records/s column: benches that measure record throughput carry a
+        # {cell: records_per_s} summary — report the best cell inline so
+        # the perf trajectory is readable without opening the artifact
+        rps = rec.get("records_per_s")
+        if isinstance(rps, dict) and rps:
+            top = max(rps, key=rps.get)
+            rps_col = f"{rps[top]:8.1f} ({top})"
+        else:
+            rps_col = "       -"
+        print(f"{name:12s} OK   {path} records/s={rps_col} "
+              f"label={rec.get('label')} platform={rec.get('platform')}")
     return 0
 
 

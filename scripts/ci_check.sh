@@ -30,6 +30,11 @@ python examples/single_server.py
 # answers, and a warm rejoin serves its first query without re-tuning
 # (PIR_SMOKE_REPL scale: 3 cheap LWE compiles total)
 python examples/replicas.py
+# batch-plane smoke: cuckoo-bucketed m=4 retrieval at PIR_SMOKE_BATCH
+# scale — uniform B-wide rounds, a mid-session stage+publish landing in
+# every candidate bucket, checksummed reconstruction, and the one-compile-
+# per-party invariant (B buckets share one serve step: 2 compiles total)
+python examples/batch_query.py
 # engine-plane smoke: tiny-budget autotune (interpret mode, <=2 candidates
 # per kernel, nothing persisted) + the heuristic-fallback gate — asserts
 # an empty plan cache resolves to exactly the pre-engine plan_for choices

@@ -270,6 +270,14 @@ class PIRConfig:
     # IntegrityError instead of returning garbage (DESIGN.md §12). Widens
     # every stored record by 4 bytes; item_bytes stays the *logical* width.
     checksum: bool = False
+    # batch PIR (DESIGN.md §14): m > 0 enables the cuckoo-bucketed
+    # composite — m records per round over B = ceil(cuckoo_c·m) buckets,
+    # cuckoo_hashes candidate buckets per index. cuckoo_seed is public
+    # (data placement, not key material). 0 keeps single-query serving.
+    batch_m: int = 0
+    cuckoo_c: float = 2.0
+    cuckoo_hashes: int = 3
+    cuckoo_seed: int = 0x5EEDBA11
 
     def __post_init__(self):
         mode, proto = self.mode, self.protocol

@@ -65,6 +65,14 @@ PIR_SMOKE_REPL = PIRConfig(n_items=1 << 12, item_bytes=32,
 PIR_SMOKE_CHK = PIRConfig(n_items=1 << 12, item_bytes=32,
                           protocol="lwe-simple-1", n_servers=1,
                           batch_queries=4, checksum=True)
+# batch-PIR smoke (examples/batch_query.py, tests): m=4 indices per round
+# cuckoo-hashed into B=8 buckets of ~2^8 rows; checksum on so verified
+# reconstruction rides through reassembly. One bucketed serve step is
+# shared across all B same-shape bucket views — a single compile/party.
+PIR_SMOKE_BATCH = PIRConfig(n_items=1 << 10, item_bytes=32,
+                            batch_m=4, batch_queries=1, checksum=True)
+# paper-scale batch point (plan/roofline math): 1 GB DB, 256-record batches
+PIR_1G_BATCH = PIRConfig(n_items=1 << 25, item_bytes=32, batch_m=256)
 
 PIR_CONFIGS = {
     "pir-512m": PIR_512M,
@@ -82,4 +90,6 @@ PIR_CONFIGS = {
     "pir-smoke-lwe": PIR_SMOKE_LWE,
     "pir-smoke-repl": PIR_SMOKE_REPL,
     "pir-smoke-chk": PIR_SMOKE_CHK,
+    "pir-smoke-batch": PIR_SMOKE_BATCH,
+    "pir-1g-batch": PIR_1G_BATCH,
 }

@@ -9,7 +9,8 @@ arrays.
 from repro.db.spec import (VIEWS, DatabaseSpec, IntegrityError, row_checksum,
                            verify_records)
 from repro.db.sharded import PublishedDelta, ShardedDatabase, TransferStats
+from repro.db.bucketed import BucketedDatabase
 
-__all__ = ["VIEWS", "DatabaseSpec", "IntegrityError", "PublishedDelta",
-           "ShardedDatabase", "TransferStats", "row_checksum",
-           "verify_records"]
+__all__ = ["VIEWS", "BucketedDatabase", "DatabaseSpec", "IntegrityError",
+           "PublishedDelta", "ShardedDatabase", "TransferStats",
+           "row_checksum", "verify_records"]

@@ -1,0 +1,209 @@
+"""`BucketedDatabase` — the batch-PIR bucketed layout over ShardedDatabase.
+
+The server half of the batch composite (DESIGN.md §14): one logical
+N-record database materialized as B per-bucket sub-databases, each a
+full :class:`~repro.db.sharded.ShardedDatabase` of ``capacity`` rows
+(the cuckoo layout's power-of-two bucket height). Record i is
+*replicated* into every distinct candidate bucket ``h_j(i)`` — simple
+hashing server-side, so whichever bucket the client's cuckoo assignment
+picks for i, that bucket can answer for it.
+
+What stays inherited rather than re-implemented:
+
+Placement / views
+    Each bucket IS a ShardedDatabase (constructed from a ``DatabaseSpec``
+    of ``capacity`` rows), so mesh placement, derived byte views, and the
+    per-view pack accounting all apply per bucket unchanged — and so does
+    the serving stack: `BucketedServeFns.answer(view, keys)` takes the
+    view as an argument, so B same-shape buckets share ONE compiled serve
+    step per party.
+
+Epoch / publish semantics
+    ``stage(rows, values)`` takes GLOBAL row ids and fans each write out
+    to the (bucket, slot) occurrences the layout places that record at;
+    ``publish()`` publishes every touched bucket and bumps ONE outer
+    epoch, so a dispatch that snapshots under the outer lock always sees
+    all buckets at a mutually consistent version (per-bucket double
+    buffering keeps in-flight answers valid exactly as before).
+
+Checksums ride through: buckets receive logical payload rows and attach
+the per-row checksum column themselves (pad rows are zero payloads with
+valid checksums), so per-bucket reconstruction verifies unchanged.
+
+Memory cost is the textbook batch-PIR expansion: B·capacity stored rows
+~= 2·n_hashes·N (replication × power-of-two rounding) — the space half
+of the m-fold scan amortization the runtime layer cashes in.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import replace as dc_replace
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.config import PIRConfig
+from repro.core.batch import CuckooLayout, CuckooParams
+from repro.db.sharded import ShardedDatabase, TransferStats
+from repro.db.spec import DatabaseSpec
+
+
+class BucketedDatabase:
+    """B cuckoo buckets of one PIR database, versioned by one outer epoch.
+
+    ``db_words``: the logical host store, ``[N, item_words]`` u32 payload
+    rows (stored width with the checksum column already attached is also
+    accepted — the column is recomputed per bucket either way, since pad
+    rows need their own valid checksums).
+    """
+
+    def __init__(self, db_words: np.ndarray, cfg: PIRConfig,
+                 mesh: jax.sharding.Mesh,
+                 layout: Optional[CuckooLayout] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.params = CuckooParams.from_config(cfg).validate()
+        self.spec = DatabaseSpec.from_config(cfg)       # outer, logical
+        if layout is None:
+            layout = CuckooLayout.build(cfg.n_items, self.params)
+        if layout.n_items != cfg.n_items or layout.params != self.params:
+            raise ValueError(
+                f"layout built for (n_items={layout.n_items}, "
+                f"{layout.params}) does not match cfg "
+                f"(n_items={cfg.n_items}, {self.params})")
+        self.layout = layout
+        #: per-bucket spec/config: same record format, ``capacity`` rows.
+        #: inner_cfg is what the inner protocol keygens/plans against —
+        #: the engine's ``spec_signature`` sees the bucket shape, so plan
+        #: resolution and cache keys are per bucket shape automatically.
+        self.inner_spec = DatabaseSpec(n_items=layout.capacity,
+                                       item_bytes=cfg.item_bytes,
+                                       checksum=cfg.checksum)
+        self.inner_cfg = dc_replace(cfg, n_items=layout.capacity)
+
+        host = np.asarray(db_words)
+        if host.ndim != 2 or host.shape[0] != cfg.n_items:
+            raise ValueError(
+                f"db_words must be [{cfg.n_items}, words], got {host.shape}")
+        if host.shape[1] == self.spec.stored_words and self.spec.checksum:
+            host = host[:, :self.spec.item_words]       # re-derived per bucket
+        if host.shape[1] != self.spec.item_words:
+            raise ValueError(
+                f"db_words rows must be {self.spec.item_words} payload "
+                f"words (or {self.spec.stored_words} stored), got "
+                f"{host.shape[1]}")
+
+        self._lock = threading.RLock()
+        self._epoch = 0
+        pad = np.zeros((1, self.spec.item_words), np.uint32)
+        self.buckets: Tuple[ShardedDatabase, ...] = tuple(
+            ShardedDatabase(
+                np.concatenate(
+                    [host[rows],
+                     np.broadcast_to(pad, (layout.capacity - len(rows),
+                                           self.spec.item_words))]),
+                self.inner_spec, mesh)
+            for rows in layout.bucket_rows)
+
+    # ------------------------------------------------------------------
+    # geometry
+    # ------------------------------------------------------------------
+
+    @property
+    def n_buckets(self) -> int:
+        return self.layout.n_buckets
+
+    @property
+    def capacity(self) -> int:
+        return self.layout.capacity
+
+    @property
+    def expansion(self) -> float:
+        """Stored rows / logical rows — the replication space cost."""
+        return self.n_buckets * self.capacity / self.spec.n_items
+
+    @property
+    def epoch(self) -> int:
+        """The OUTER epoch: bumped once per publish that changed any
+        bucket, so answers from different buckets of one dispatch carry
+        one comparable tag."""
+        with self._lock:
+            return self._epoch
+
+    @property
+    def n_staged(self) -> int:
+        with self._lock:
+            return sum(b.n_staged for b in self.buckets)
+
+    @property
+    def stats(self) -> TransferStats:
+        """Aggregate transfer accounting across all buckets."""
+        agg = TransferStats()
+        for b in self.buckets:
+            for k in vars(agg):
+                setattr(agg, k, getattr(agg, k) + getattr(b.stats, k))
+        return agg
+
+    # ------------------------------------------------------------------
+    # reads
+    # ------------------------------------------------------------------
+
+    def snapshot(self, names: Tuple[str, ...] = ("words",)
+                 ) -> Tuple[int, Dict[str, Tuple[jax.Array, ...]]]:
+        """Atomically capture (outer epoch, per-bucket views per name).
+
+        The outer lock serializes against :meth:`publish`, so the B views
+        of one snapshot are always a mutually consistent version — the
+        bucketed extension of ``ShardedDatabase.snapshot``'s guarantee.
+        """
+        with self._lock:
+            return self._epoch, {
+                n: tuple(b.view(n) for b in self.buckets) for n in names}
+
+    # ------------------------------------------------------------------
+    # epoched online updates (global rows in, bucket deltas out)
+    # ------------------------------------------------------------------
+
+    def stage(self, rows, values) -> int:
+        """Stage GLOBAL row writes; each lands in all its bucket views.
+
+        ``rows``: [R] global indices; ``values``: [R, item_words] u32 or
+        [R, item_bytes] u8 logical payloads. One logical write fans out
+        to ≤ n_hashes (bucket, slot) writes — the replication invariant
+        that keeps every candidate bucket able to answer for the record.
+        Returns the total staged logical entry count.
+        """
+        idx = np.atleast_1d(np.asarray(rows, np.int64))
+        vals = self.spec.coerce_rows_to_words(values)
+        if idx.ndim != 1 or len(idx) != len(vals):
+            raise ValueError(
+                f"rows/values length mismatch: {idx.shape} vs {vals.shape}")
+        if len(idx) and (idx.min() < 0 or idx.max() >= self.spec.n_items):
+            raise ValueError(
+                f"row indices out of range [0, {self.spec.n_items})")
+        with self._lock:
+            for r, v in zip(idx, vals):
+                for b, slot in self.layout.occurrences(int(r)):
+                    self.buckets[b].stage([slot], v[None, :])
+            self._n_staged_logical = getattr(
+                self, "_n_staged_logical", 0) + len(idx)
+            return self._n_staged_logical
+
+    def publish(self) -> int:
+        """Publish every touched bucket; bump the outer epoch once.
+
+        Per-bucket publishes keep their own double-buffered epochs (in-
+        flight per-bucket answers stay valid); the outer epoch advances
+        iff any bucket advanced, so no-op publishes stay no-ops.
+        """
+        with self._lock:
+            changed = False
+            for b in self.buckets:
+                if b.n_staged:
+                    b.publish()
+                    changed = True
+            if changed:
+                self._epoch += 1
+                self._n_staged_logical = 0
+            return self._epoch

@@ -26,8 +26,14 @@ from __future__ import annotations
 from dataclasses import replace as _replace
 from typing import Optional
 
-from repro.engine.backend import (FORCE_BACKEND_ENV, backend,
-                                  default_interpret, legal_tile, on_tpu)
+# the probe is re-exported under a DIFFERENT name on purpose: a package
+# global named ``backend`` would shadow the ``repro.engine.backend``
+# submodule attribute on this package (module globals ARE package attrs),
+# making ``import repro.engine.backend as m`` bind the function instead of
+# the module. tests/test_engine.py pins the regression.
+from repro.engine.backend import backend as probe_backend
+from repro.engine.backend import (FORCE_BACKEND_ENV, default_interpret,
+                                  legal_tile, on_tpu)
 from repro.engine.cache import (PlanCache, cache_path, plan_key,
                                 spec_signature)
 from repro.engine.kernels import (KERNELS, KernelDescriptor, ProblemShape,
@@ -39,7 +45,7 @@ from repro.engine.tuner import (SMOKE_BUDGET, TuneBudget, TuneResult,
                                 tune_standalone)
 
 __all__ = [
-    "FORCE_BACKEND_ENV", "backend", "default_interpret", "legal_tile",
+    "FORCE_BACKEND_ENV", "probe_backend", "default_interpret", "legal_tile",
     "on_tpu", "PlanCache", "cache_path", "plan_key", "spec_signature",
     "KERNELS", "KernelDescriptor", "ProblemShape", "get_kernel",
     "predicted_step_bytes", "serve_kernels", "SMOKE_BUDGET", "TuneBudget",
@@ -72,7 +78,7 @@ def resolve(cfg, n_queries: int, *, backend_name: Optional[str] = None,
     taken from the caller. The miss path is ``heuristic_plan``, i.e. the
     pre-engine ``plan_for`` verbatim.
     """
-    be = backend_name or backend()
+    be = backend_name or probe_backend()
     hit = plan_cache().get(be, cfg.protocol, spec_signature(cfg), n_queries)
     if hit is not None:
         return _replace(hit, collective=collective)
@@ -92,7 +98,7 @@ def record_plans(cfg, plans: dict, *, backend_name: Optional[str] = None,
     Returns the number of entries written; ``persist=True`` also saves the
     cache file so the warm start survives the process.
     """
-    be = backend_name or backend()
+    be = backend_name or probe_backend()
     cache = plan_cache()
     sig = spec_signature(cfg)
     written = sum(
@@ -116,7 +122,7 @@ def plan_report(cfg, plan, bucket: int, *, n_shards: int = 1,
     """
     from repro.analysis.roofline import achieved_fraction, peak_bytes_per_s
     from repro.core import protocol as protocol_mod
-    be = backend_name or backend()
+    be = backend_name or probe_backend()
     proto = protocol_mod.get(cfg.protocol)
     shape = problem_shape(cfg, bucket, n_shards=n_shards)
     step_bytes = predicted_step_bytes(plan, proto.share_kind, shape)

@@ -67,7 +67,7 @@ def heuristic_plan(cfg, n_queries: int, *, backend: Optional[str] = None,
       * single-query buckets skip the fused chunk machinery.
 
     The only behavioral delta vs the pre-engine code: the backend probe is
-    ``engine.backend()`` (one probe for the whole stack, ``REPRO_FORCE_
+    ``engine.probe_backend()`` (one probe for the whole stack, ``REPRO_FORCE_
     BACKEND``-overridable) instead of a raw ``jax.default_backend()``.
     """
     from repro.core import protocol as protocol_mod

@@ -922,6 +922,18 @@ class MultiServerPIR:
         # derives the wait from it
         return np.stack([f.result() for f in futs])
 
+    def query_batch(self, indices: Sequence[int]) -> np.ndarray:
+        """Multi-query retrieval; same contract as :meth:`query`.
+
+        Here each index is an independent full-DB-scan query (they only
+        share the scheduler's padded-batch dispatch). The cuckoo-bucketed
+        composite (``runtime/batch.py`` :class:`BatchPIR`) overrides this
+        with the amortized m-records-per-round protocol — callers written
+        against ``query_batch`` get the algorithmic speedup wherever the
+        deployment provides it.
+        """
+        return self.query(indices)
+
 
 class SingleServerPIR(MultiServerPIR):
     """Single-server deployment for hint protocols (``lwe-simple-1``).

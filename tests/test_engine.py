@@ -41,17 +41,37 @@ N = 1 << LOG_N
 
 def test_backend_probe_and_force_override(monkeypatch):
     monkeypatch.delenv(FORCE_BACKEND_ENV, raising=False)
-    assert engine.backend() == jax.default_backend()
+    assert engine.probe_backend() == jax.default_backend()
     # kernels/ops.py interpret default and plan selection read ONE probe
-    assert ops.default_interpret() == (engine.backend() != "tpu")
+    assert ops.default_interpret() == (engine.probe_backend() != "tpu")
     monkeypatch.setenv(FORCE_BACKEND_ENV, "tpu")
-    assert engine.backend() == "tpu"
+    assert engine.probe_backend() == "tpu"
     assert ops.default_interpret() is False
     # plan selection is pinned too: CI can force the TPU plan rules on CPU
     plan = plan_for(PIRConfig(n_items=N), 4)
     assert plan.scan == "pallas"
     monkeypatch.setenv(FORCE_BACKEND_ENV, "cpu")
     assert plan_for(PIRConfig(n_items=N), 4).scan == "jnp"
+
+
+def test_backend_submodule_not_shadowed_by_reexport():
+    # regression (PR 9 note): a package global named ``backend`` used to
+    # shadow the submodule attribute on ``repro.engine`` (module globals
+    # ARE package attrs), so ``import repro.engine.backend as m`` bound
+    # the re-exported *function* instead of the module. The probe is now
+    # re-exported as ``probe_backend`` and the submodule must win.
+    import importlib
+    import types
+
+    import repro.engine.backend as m
+    assert isinstance(m, types.ModuleType)
+    assert m is importlib.import_module("repro.engine.backend")
+    assert getattr(engine, "backend") is m
+    # the renamed re-export is the same callable as the module's probe
+    assert engine.probe_backend is m.backend
+    assert engine.probe_backend() == m.backend()
+    assert "backend" not in engine.__all__
+    assert "probe_backend" in engine.__all__
 
 
 def test_legal_tile_rules():
@@ -226,7 +246,7 @@ def test_lwe_plan_resolution_through_engine(tmp_path, monkeypatch):
     tuned = ExecutionPlan(expand="materialize", scan="jnp", tile_r=512,
                           tile_q=8, tile_l=128, provenance="tuned")
     c = PlanCache(path)
-    c.put(engine.backend(), cfg.protocol, spec_signature(cfg), 2, tuned)
+    c.put(engine.probe_backend(), cfg.protocol, spec_signature(cfg), 2, tuned)
     c.save()
     monkeypatch.setenv("REPRO_PLAN_CACHE", path)
     engine.plan_cache(reload=True)
@@ -396,7 +416,7 @@ def test_tuner_tiny_budget_picks_no_worse_than_heuristic(tmp_path):
     assert plan_label(res.heuristic) in res.timings
     # the winner was persisted under the engine's cache key
     cache.save()
-    hit = PlanCache(cache.path).get(engine.backend(), cfg.protocol,
+    hit = PlanCache(cache.path).get(engine.probe_backend(), cfg.protocol,
                                     spec_signature(cfg), 2)
     assert hit == res.plan
 

@@ -151,7 +151,7 @@ def _oracle_records(proto, db_words, indices):
     return pir.db_as_bytes(db_words)[indices]
 
 
-def _answer_one(proto, view_np, key):
+def _answer_one(proto, view_np, key, log_n=LOG_N):
     """One party's answer for ONE query, eagerly, per share algebra.
 
     Deliberately the single-key evaluation idiom (``dpf.eval_range`` /
@@ -160,12 +160,12 @@ def _answer_one(proto, view_np, key):
     vmap forms would each pay a fresh multi-second lowering here.
     """
     if proto.share_kind == "xor":
-        bits = (_party_bits_np(key, LOG_N) if key.root_seed.ndim > 1
-                else _bits_np(key, LOG_N))
+        bits = (_party_bits_np(key, log_n) if key.root_seed.ndim > 1
+                else _bits_np(key, log_n))
         return _answer_np(view_np, bits)                       # [W] u32
     if proto.share_kind == "additive":
         shares = np.asarray(dpf.eval_bytes_batch(
-            dpf.stack_keys([key]), 0, LOG_N))[0]
+            dpf.stack_keys([key]), 0, log_n))[0]
         return (shares.astype(np.int64)
                 @ view_np.astype(np.int64)).astype(np.int32)   # [L] i32
     # lwe: ct^T.D mod q in numpy (device answer parity lives in test_lwe)
@@ -399,3 +399,166 @@ def test_pad_keys_roundtrip_k3_component_axis():
         bits_pad = _party_bits_np(
             jax.tree_util.tree_map(lambda x: x[3], padded), LOG_N)
         np.testing.assert_array_equal(bits_pad, bits_last)
+
+
+# ---------------------------------------------------------------------------
+# batch composite (cuckoo-bucketed, DESIGN.md §14) conformance
+# ---------------------------------------------------------------------------
+
+#: the inner protocols the batch composite serves (every registered
+#: k-party protocol; hint protocols are rejected by BatchPIR)
+BATCH_PROTOCOLS = ["xor-dpf-2", "additive-dpf-2", "xor-dpf-k"]
+
+
+def _batch_cfg(name: str) -> PIRConfig:
+    n_servers = {"xor-dpf-k": 3}.get(name, 2)
+    # checksum ON: PR 8 verified reconstruction must ride through the
+    # per-bucket reconstructions (incl. dummy buckets' pad rows)
+    return PIRConfig(n_items=N, protocol=name, n_servers=n_servers,
+                     batch_m=4, checksum=True)
+
+
+def _eager_round(proto, bdb, plan):
+    """One RoundPlan's per-party per-bucket answers + reassembled records,
+    eagerly (single-key eval; no serve-step compiles) — the oracle-side
+    mirror of BatchPIR's dispatch/finalize closures."""
+    log_n = (bdb.capacity - 1).bit_length()
+    epoch, views = bdb.snapshot((proto.db_view,))
+    k = proto.n_parties(bdb.inner_cfg)
+    shares = [np.stack([_answer_one(proto,
+                                    np.asarray(views[proto.db_view][b]),
+                                    plan.keys[b][p], log_n)
+                        for b in range(bdb.n_buckets)])
+              for p in range(k)]
+    recs = np.asarray(proto.reconstruct_with(
+        shares, [None] * bdb.n_buckets, cfg=bdb.inner_cfg))
+    from repro.core.batch import reassemble
+    return reassemble(plan, recs), epoch
+
+
+@pytest.mark.parametrize("name", BATCH_PROTOCOLS)
+def test_batch_composite_conformance(name):
+    """The batch composite against the numpy oracle, per inner protocol:
+    a cuckoo-planned round reconstructs the requested records (duplicates
+    included, checksum verification riding through), and staged rows land
+    in every candidate bucket's view across a publish (epoch tagging)."""
+    from repro.core.batch import plan_round
+    from repro.db import BucketedDatabase
+    from repro.launch.mesh import make_local_mesh
+    from repro.runtime.serve_loop import QueryScheduler
+
+    cfg = _batch_cfg(name)
+    proto = for_config(cfg)
+    bdb = BucketedDatabase(DB, cfg, make_local_mesh())
+    rng = np.random.default_rng(3)
+
+    indices = [5, N - 1, 17, 5]            # duplicate rides one bucket
+    plan = plan_round(rng, indices, bdb.layout, bdb.inner_cfg, proto)
+    rec, epoch = _eager_round(proto, bdb, plan)
+    assert epoch == 0
+    np.testing.assert_array_equal(rec, _oracle_records(proto, DB, indices))
+
+    # epoch tagging through a QueryScheduler wired like BatchPIR's: the
+    # answer computed after a publish carries the new OUTER epoch and the
+    # staged row is served from every candidate bucket it was fanned to
+    def dispatch(plans):
+        outs = [_eager_round(proto, bdb, p) for p in plans]
+        return [o[0] for o in outs], outs[0][1]
+
+    sched = QueryScheduler(
+        collate=list, stage=lambda p: p, dispatch=dispatch,
+        finalize=lambda raw, n: raw[0][:n], buckets=(1,),
+        epoch_of=lambda raw: raw[1])
+
+    target = 9
+    fut0 = sched.submit(plan_round(rng, [target], bdb.layout,
+                                   bdb.inner_cfg, proto))
+    sched.pump()
+    assert fut0.epoch == 0
+    np.testing.assert_array_equal(fut0.result(0)[0],
+                                  _oracle_records(proto, DB, [target])[0])
+
+    new_val = np.random.default_rng(8).integers(
+        0, 1 << 32, size=(1, 8), dtype=np.uint32)
+    bdb.stage([target], new_val)
+    assert bdb.publish() == 1
+    updated = DB.copy()
+    updated[target] = new_val
+    fut1 = sched.submit(plan_round(rng, [target], bdb.layout,
+                                   bdb.inner_cfg, proto))
+    sched.pump()
+    assert fut1.epoch == 1
+    np.testing.assert_array_equal(fut1.result(0)[0],
+                                  _oracle_records(proto, updated,
+                                                  [target])[0])
+
+
+@pytest.mark.parametrize("name", BATCH_PROTOCOLS)
+def test_batch_round_uniform_padding_no_occupancy_leak(name):
+    """ACCEPTANCE: every round issues exactly B per-bucket queries with an
+    identical server-observable key structure, REGARDLESS of which m
+    indices were requested — bucket occupancy never leaks the batch."""
+    from repro.core.batch import CuckooLayout, CuckooParams, plan_round
+    import dataclasses
+
+    cfg = _batch_cfg(name)
+    proto = for_config(cfg)
+    params = CuckooParams.from_config(cfg).validate()
+    layout = CuckooLayout.build(cfg.n_items, params)
+    inner_cfg = dataclasses.replace(cfg, n_items=layout.capacity)
+    B = params.n_buckets
+    rng = np.random.default_rng(11)
+
+    # adversarial spreads: clustered, spread, partial, duplicated —
+    # every round plan must be structurally identical
+    batches = [[0, 1, 2, 3], [7, 19, 42, 63], [5], [9, 9, 9, 9],
+               [N - 4, N - 3, N - 2, N - 1]]
+    ref_struct = None
+    for idx in batches:
+        plan = plan_round(rng, idx, layout, inner_cfg, proto)
+        assert plan.n_buckets == B                       # exactly B queries
+        assert len(plan.keys) == B and len(plan.real) == B
+        assert sum(plan.real) == len(set(idx))           # rest are dummies
+        # the server-observable shape: per-party key pytree structure and
+        # leaf shapes are index-independent (dummies share real keygen)
+        struct = [
+            [(jax.tree_util.tree_structure(plan.keys[b][p]),
+              tuple(np.shape(leaf)
+                    for leaf in jax.tree_util.tree_leaves(plan.keys[b][p])))
+             for b in range(B)]
+            for p in range(proto.n_parties(cfg))]
+        if ref_struct is None:
+            ref_struct = struct
+        assert struct == ref_struct
+
+
+def test_batch_dummy_query_indistinguishability_smoke():
+    """Dummy-bucket keys run the real keygen on a uniform slot: their key
+    material's marginal statistics match real keys' (loose first-moment
+    smoke over DPF root seeds — cryptographic indistinguishability is the
+    PRG's job; this guards against e.g. zeroed dummy seeds)."""
+    from repro.core.batch import CuckooLayout, CuckooParams, plan_round
+    import dataclasses
+
+    cfg = _batch_cfg("xor-dpf-2")
+    proto = for_config(cfg)
+    params = CuckooParams.from_config(cfg).validate()
+    layout = CuckooLayout.build(cfg.n_items, params)
+    inner_cfg = dataclasses.replace(cfg, n_items=layout.capacity)
+    rng = np.random.default_rng(29)
+
+    real_w, dummy_w = [], []
+    for _ in range(64):
+        idx = rng.choice(N, size=4, replace=False)
+        plan = plan_round(rng, idx, layout, inner_cfg, proto)
+        for b in range(plan.n_buckets):
+            for p in range(2):
+                seed = np.asarray(plan.keys[b][p].root_seed,
+                                  np.uint64).ravel()
+                (real_w if plan.real[b] else dummy_w).extend(seed.tolist())
+    assert len(real_w) >= 256 and len(dummy_w) >= 256
+    # both populations are uniform u32 words: means within 10% of range
+    mid, tol = 2.0 ** 31, 0.1 * 2.0 ** 32
+    assert abs(np.mean(real_w) - mid) < tol
+    assert abs(np.mean(dummy_w) - mid) < tol
+    assert abs(np.mean(real_w) - np.mean(dummy_w)) < tol
